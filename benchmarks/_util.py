@@ -1,0 +1,38 @@
+"""Benchmark utilities: timing, table rendering, scale control."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"   # paper-scale (1M keys)
+
+
+def scale(n_full: int, n_ci: int) -> int:
+    return n_full if FULL else n_ci
+
+
+def time_op(fn, *args, repeat: int = 3, **kw):
+    """Median wall time of fn(*args)."""
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def mops(n_ops: int, seconds: float) -> float:
+    return n_ops / max(seconds, 1e-12) / 1e6
+
+
+def render_table(title: str, headers: list, rows: list) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    out = [f"\n== {title} =="]
+    out.append("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

@@ -1,0 +1,136 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md): reads the dry-run
+artifacts (artifacts/dryrun/*.json) and derives the three roofline terms
+per (arch x shape x mesh):
+
+    compute   = HLO_FLOPs_per_device / peak_FLOPs            [197 TF/s bf16]
+    memory    = HLO_bytes_per_device / HBM_bw                [819 GB/s]
+    collective= collective_bytes_per_device / link_bw        [~50 GB/s/link]
+
+cost_analysis is per-device (the SPMD-partitioned program), so per-chip
+peaks are the right denominators. The dominant term is the bottleneck; the
+MODEL_FLOPS/HLO_FLOPs ratio exposes remat/padding waste."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from ._util import render_table
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def _calibration_for(rec: dict, art_dir: str) -> dict | None:
+    """Scan-over-layers undercounts while-body cost; prefer the
+    depth-extrapolated totals from launch/calibrate.py when present."""
+    fn = os.path.join(os.path.dirname(art_dir.rstrip("/")), "calib",
+                      f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        return json.load(f)
+
+
+def analyze_record(rec: dict, art_dir: str = "artifacts/dryrun") -> dict:
+    cost = rec.get("cost", {})
+    coll = rec.get("collectives", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll_dev = sum(coll.get(k, 0) for k in
+                   ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"))
+    calib = _calibration_for(rec, art_dir)
+    if calib is not None:
+        ext = calib["extrapolated"]
+        flops_dev = ext.get("flops_scan_corrected", ext["flops"])
+        bytes_dev = ext["bytes"]
+        coll_dev = ext["coll"]
+
+    # HLO 'bytes accessed' counts every op's logical operands — an upper
+    # bound on HBM traffic (TPU fusion keeps most intermediates in VMEM).
+    # mem_lb is the principled lower bound: resident state r/w + one pass
+    # over the live activations. The true memory term lies between them.
+    mm = rec.get("memory_model", {})
+    args = mm.get("args", {})
+    if rec.get("kind") == "train":
+        mem_lb = (6 * args.get("params", 0)          # p,m,v read + write
+                  + args.get("batch", 0)
+                  + 2 * mm.get("remat_stash_est", 0)
+                  + mm.get("liveness_peak", 0))
+    else:
+        mem_lb = (args.get("params", 0) + 2 * args.get("cache", 0)
+                  + args.get("batch", 0) + mm.get("liveness_peak", 0))
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_mem_lb = mem_lb / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    terms_lb = {"compute": t_comp, "memory": t_mem_lb, "collective": t_coll}
+    dom_lb = max(terms_lb, key=terms_lb.get)
+    # MODEL_FLOPS: 6·N_active·tokens (train) / 2·N_active·tokens (serve);
+    # recomputed here because prefill processes batch x seq tokens.
+    from repro.configs.base import SHAPES as _SH
+    s = _SH[rec["shape"]]
+    n_act = rec.get("params_active", 0)
+    if rec.get("kind") == "train":
+        model_flops = 6.0 * n_act * s.batch * s.seq
+    elif rec.get("kind") == "prefill":
+        model_flops = 2.0 * n_act * s.batch * s.seq
+    else:
+        model_flops = 2.0 * n_act * s.batch
+    model_flops_dev = model_flops / max(rec.get("n_devices", 1), 1)
+    useful = model_flops_dev / flops_dev if flops_dev else 0.0
+    # intrinsic step time: the model flops at peak, or (for serving) the
+    # mandatory cache/param traffic at HBM bandwidth — whichever is larger.
+    t_useful = model_flops_dev / PEAK_FLOPS
+    if rec.get("kind") != "train":
+        t_useful = max(t_useful, t_mem_lb)
+    bound = max(terms.values())
+    frac = t_useful / bound if bound > 0 else 0.0
+    bound_lb = max(terms_lb.values())
+    frac_lb = t_useful / bound_lb if bound_lb > 0 else 0.0
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_memory_lb_s": t_mem_lb,
+            "t_collective_s": t_coll, "dominant": dom,
+            "dominant_lb": dom_lb,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": frac,
+            "roofline_fraction_lb": frac_lb,
+            "peak_hbm_gib": rec.get("memory_model", {}).get("total", 0) / 2**30}
+
+
+def run(art_dir: str = "artifacts/dryrun", mesh_filter: str = "single") -> str:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if mesh_filter and mesh_filter not in rec.get("mesh", ""):
+            continue
+        recs.append(analyze_record(rec, art_dir))
+    if not recs:
+        return ("\n== Roofline ==\n(no dry-run artifacts found — run "
+                "PYTHONPATH=src python -m repro.launch.dryrun first)")
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        rows.append([
+            r["arch"], r["shape"],
+            f"{r['t_compute_s']*1e3:.1f}", f"{r['t_memory_s']*1e3:.1f}",
+            f"{r['t_memory_lb_s']*1e3:.1f}",
+            f"{r['t_collective_s']*1e3:.1f}", r["dominant_lb"],
+            f"{r['useful_flops_ratio']:.2f}",
+            f"{r['roofline_fraction']*100:.0f}%",
+            f"{r['roofline_fraction_lb']*100:.0f}%",
+            f"{r['peak_hbm_gib']:.1f}",
+        ])
+    return render_table(
+        f"Roofline per (arch x shape), mesh={mesh_filter} "
+        "[per-device ms; memUB = HLO bytes (fusion-blind upper bound), "
+        "memLB = resident-state+activation traffic lower bound; fractions = "
+        "useful compute / dominant term under each memory model]",
+        ["arch", "shape", "comp ms", "memUB ms", "memLB ms", "coll ms",
+         "bottleneck", "useful", "roofUB", "roofLB", "HBM GiB"],
+        rows)

@@ -1,0 +1,46 @@
+"""Benchmark driver: one benchmark per paper table/figure + the roofline
+table from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run            # CI scale
+    BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper scale (1M keys)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+import jax.numpy as jnp
+
+
+def main() -> int:
+    from repro.models import common as MC
+    MC.set_compute_dtype(jnp.float32)        # CPU execution dtype
+
+    from . import (chain_rule, static_dictionary, huffman, adaptive_hashing,
+                   lsm_pointquery, learned_filter, roofline)
+    benches = [
+        ("chain_rule (§2)", chain_rule.run),
+        ("static_dictionary (§5.1, Fig 6/7)", static_dictionary.run),
+        ("huffman (§5.2, Fig 8)", huffman.run),
+        ("adaptive_hashing (§5.3, Tab 3/Fig 10)", adaptive_hashing.run),
+        ("lsm_pointquery (§5.4, Fig 12)", lsm_pointquery.run),
+        ("learned_filter (§5.5, Fig 13)", learned_filter.run),
+        ("roofline (dry-run artifacts)", roofline.run),
+    ]
+    failures = 0
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            print(out)
+            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"[{name}] FAILED:\n{traceback.format_exc()}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

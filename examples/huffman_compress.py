@@ -1,0 +1,31 @@
+"""Random-access Huffman coding with ChainedFilter (paper §5.2):
+compress a skewed string, decode arbitrary positions without touching the
+rest of the stream, and compare against entropy + raw Huffman.
+
+    PYTHONPATH=src python examples/huffman_compress.py
+"""
+import numpy as np
+
+from repro.core.huffman import (RandomAccessHuffman, exponential_text,
+                                entropy_bits_per_char, huffman_bits_per_char)
+
+
+def main():
+    text = exponential_text(8, 50_000, seed=0)
+    ra = RandomAccessHuffman.build(text, seed=1)
+
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(text), 1000)
+    ok = all(ra.decode_at(int(i)) == text[int(i)] for i in idx)
+    assert ok
+    print(f"{len(text)} chars, alphabet={len(set(text))}")
+    print(f"entropy H(p):        {entropy_bits_per_char(text):.3f} bits/char")
+    print(f"raw Huffman:         {huffman_bits_per_char(text):.3f} bits/char "
+          "(sequential decode only)")
+    print(f"ChainedFilter RA:    {ra.bits_per_char():.3f} bits/char "
+          "(random access, seed-keyed confidentiality, bit-flip robust)")
+    print(f"random access decode of 1000 positions: all correct")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests through the tiered
+ChainedFilter prefix cache (paper §5.4 as a first-class serving feature).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "llama3.2-1b", "--requests", "24",
+                "--max-new", "8", "--n-prefixes", "6"])

@@ -1,0 +1,33 @@
+# The paper's primary contribution: chain-rule theory and the ChainedFilter
+# framework, plus its application layers (§5). Query paths are JAX-native;
+# constructions are host-side bulk-vectorized numpy (see DESIGN.md §3 for the
+# TPU adaptation of peeling).
+from .theory import (f_lower_bound, chain_rule_gap, entropy,
+                     chained_and_space_exact, chained_and_space_exact_rounded,
+                     chained_cascade_space_exact, exact_bloomier_space,
+                     corollary_4_1_space, optimal_eps_prime_exact, cuckoo_lambda)
+from .bloom import BloomFilter, optimal_params
+from .bloomier import (BloomierTable, XorFilter, ExactBloomier, PeelingFailed,
+                       bulk_peel, bulk_assign, make_layout)
+from .chained import ChainedFilterAnd, ChainedFilterCascade
+from .cuckoo import CuckooHashTable, CuckooFilter, CuckooFull
+from .othello import Othello, DynamicExactFilter
+from .adaptive import AdaptiveCuckoo, emoma_bits, expected_access_reduction
+from .learned import LearnedFilter, synth_url_dataset
+from . import hashing
+
+__all__ = [
+    "f_lower_bound", "chain_rule_gap", "entropy",
+    "chained_and_space_exact", "chained_and_space_exact_rounded",
+    "chained_cascade_space_exact", "exact_bloomier_space",
+    "corollary_4_1_space", "optimal_eps_prime_exact", "cuckoo_lambda",
+    "BloomFilter", "optimal_params",
+    "BloomierTable", "XorFilter", "ExactBloomier", "PeelingFailed",
+    "bulk_peel", "bulk_assign", "make_layout",
+    "ChainedFilterAnd", "ChainedFilterCascade",
+    "CuckooHashTable", "CuckooFilter", "CuckooFull",
+    "Othello", "DynamicExactFilter",
+    "AdaptiveCuckoo", "emoma_bits", "expected_access_reduction",
+    "LearnedFilter", "synth_url_dataset",
+    "hashing",
+]

@@ -1,0 +1,147 @@
+"""Learned filters (paper §5.5): a learned score model in front of a backup
+filter. We compare the paper's Learned ChainedFilter (backup = exact
+ChainedFilter, fpr contributed only by the model) against the classic
+Learned Bloom Filter (backup = Bloom) and Learned Bloomier.
+
+The score model is a tiny JAX MLP trained with inline Adam. Keys carry
+feature vectors from a synthetic distribution with a learnable decision
+surface + label noise, standing in for the paper's good/bad-URL dataset.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bloom import BloomFilter
+from .bloomier import XorFilter
+from .chained import ChainedFilterAnd
+
+
+def synth_url_dataset(n_pos: int, n_neg: int, dim: int = 16, noise: float = 0.05,
+                      seed: int = 0):
+    """Returns (keys uint64, features [n,dim] f32, labels bool)."""
+    rng = np.random.default_rng(seed)
+    n = n_pos + n_neg
+    w = rng.normal(size=(dim,))
+    w /= np.linalg.norm(w)
+    # sample conditioned on class with margin; flip `noise` fraction
+    feats = rng.normal(size=(n, dim)).astype(np.float32)
+    margin = feats @ w
+    order = np.argsort(-margin)
+    labels = np.zeros(n, dtype=bool)
+    labels[order[:n_pos]] = True
+    flip = rng.random(n) < noise
+    labels ^= flip
+    keys = rng.integers(0, 2**63, size=n, dtype=np.uint64)
+    keys = keys * np.uint64(2) + labels.astype(np.uint64)  # ensure distinct per class
+    return keys, feats, labels
+
+
+def _init_mlp(dim: int, hidden: int, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * (1.0 / math.sqrt(dim)),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, 1)) * (1.0 / math.sqrt(hidden)),
+        "b2": jnp.zeros((1,)),
+    }
+
+
+def _mlp_logits(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+def train_score_model(feats: np.ndarray, labels: np.ndarray, hidden: int = 16,
+                      steps: int = 400, lr: float = 1e-2, seed: int = 0) -> dict:
+    x = jnp.asarray(feats)
+    y = jnp.asarray(labels.astype(np.float32))
+    params = _init_mlp(feats.shape[1], hidden, jax.random.PRNGKey(seed))
+
+    def loss_fn(p):
+        lg = _mlp_logits(p, x)
+        return jnp.mean(jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+    @jax.jit
+    def step(p, m, v, t):
+        g = jax.grad(loss_fn)(p)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + 1e-8), p, mh, vh)
+        return p, m, v
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    for t in range(1, steps + 1):
+        params, m, v = step(params, m, v, t)
+    return params
+
+
+def model_scores(params: dict, feats: np.ndarray) -> np.ndarray:
+    return np.asarray(_mlp_logits(params, jnp.asarray(feats)))
+
+
+def pick_threshold(scores_neg: np.ndarray, target_fpr: float) -> float:
+    """Smallest τ s.t. P[neg score ≥ τ] ≤ target_fpr."""
+    if len(scores_neg) == 0:
+        return 0.0
+    return float(np.quantile(scores_neg, 1.0 - target_fpr))
+
+
+@dataclass
+class LearnedFilter:
+    """score(x) ≥ τ → positive; else consult backup over below-τ positives."""
+
+    params: dict = field(repr=False)
+    tau: float = 0.0
+    backup_kind: str = "chained"       # 'chained' | 'bloom' | 'bloomier'
+    backup: object = None
+    model_bits: int = 0
+
+    @classmethod
+    def build(cls, keys, feats, labels, backup_kind: str = "chained",
+              model_fpr: float = 0.01, backup_fpr: float = 0.005,
+              train_frac: float = 1.0, seed: int = 0) -> "LearnedFilter":
+        n = len(keys)
+        rng = np.random.default_rng(seed)
+        tr = rng.random(n) < train_frac
+        if tr.sum() < 32:
+            tr[:] = True
+        params = train_score_model(feats[tr], labels[tr], seed=seed)
+        scores = model_scores(params, feats)
+        tau = pick_threshold(scores[~labels], model_fpr)
+        below = scores < tau
+        pos_below = keys[labels & below]
+        neg_below = keys[(~labels) & below]
+        if backup_kind == "chained":
+            backup = (ChainedFilterAnd.build(pos_below, neg_below, seed=seed)
+                      if len(pos_below) and len(neg_below) else None)
+        elif backup_kind == "bloomier":
+            alpha = max(1, int(math.ceil(math.log2(1.0 / backup_fpr))))
+            backup = XorFilter.build(pos_below, alpha, seed=seed) if len(pos_below) else None
+        elif backup_kind == "bloom":
+            backup = (BloomFilter.build(pos_below, backup_fpr, seed=seed)
+                      if len(pos_below) else None)
+        else:
+            raise ValueError(backup_kind)
+        model_bits = sum(int(np.prod(v.shape)) for v in jax.tree.leaves(params)) * 32
+        return cls(params=params, tau=tau, backup_kind=backup_kind,
+                   backup=backup, model_bits=model_bits)
+
+    def query(self, keys: np.ndarray, feats: np.ndarray) -> np.ndarray:
+        scores = model_scores(self.params, feats)
+        out = scores >= self.tau
+        below = ~out
+        if self.backup is not None and below.any():
+            out[below] = self.backup.query(np.asarray(keys, np.uint64)[below])
+        return out
+
+    @property
+    def filter_bits(self) -> int:
+        return self.backup.bits if self.backup is not None else 0

@@ -1,0 +1,146 @@
+"""LSM-tree point-query acceleration (paper §5.4), as a discrete-event model.
+
+One LSM level holds N SSTables (newest = index 0 ... oldest = N-1, matching
+the paper's "later SSTables" = older data already present when a newer table
+is flushed). Each SSTable i carries an exact ChainedFilter whose positives
+are its own keys and whose negatives are keys of *later* (older) tables
+i+1..N-1 not in table i.
+
+Query strategy (Fig 11b): probe filters newest→oldest; read each SSTable
+whose filter fires; the first read that turns out to be a false positive
+proves all remaining fired filters are also false positives ⇒ stop. Worst
+case extra reads per level: 1 (vs N for Bloom filters).
+
+No disk here — we count SSTable reads exactly and convert to latency with a
+calibrated per-read cost, reproducing the shape of Figure 12.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bloom import BloomFilter
+from .chained import ChainedFilterAnd
+from .othello import DynamicExactFilter
+from .bloomier import XorFilter
+
+
+@dataclass
+class SSTable:
+    keys: np.ndarray                      # sorted uint64
+    key_set: set = field(repr=False, default=None)
+
+    def __post_init__(self):
+        if self.key_set is None:
+            self.key_set = set(self.keys.tolist())
+
+    def contains(self, key: int) -> bool:
+        return key in self.key_set
+
+
+class LsmLevelChained:
+    """One level with per-SSTable exact ChainedFilter (dynamic 2nd stage:
+    Othello, so newly flushed tables can exclude their keys from older
+    tables' filters online — §5.4.3's construction)."""
+
+    def __init__(self, fp_alpha: int = 7, seed: int = 0):
+        self.tables: list[SSTable] = []
+        self.stage1: list[XorFilter] = []
+        self.stage2: list[DynamicExactFilter] = []
+        self.fp_alpha = fp_alpha
+        self.seed = seed
+
+    def flush(self, keys: np.ndarray) -> None:
+        """Add a NEW newest SSTable. Mirrors RocksDB: for each key of the new
+        table, query older tables' stage-1 filters; false positives there get
+        excluded via the older tables' dynamic stage-2 filters."""
+        keys = np.asarray(np.sort(keys), dtype=np.uint64)
+        new_idx = len(self.tables)
+        # exclude this table's keys from every older table's filter
+        for i in range(new_idx):
+            older = self.tables[i]
+            mask = self.stage1[i].query(keys)
+            fp_keys = keys[mask]
+            fp_keys = fp_keys[~np.isin(fp_keys, older.keys)]
+            if len(fp_keys):
+                self.stage2[i].exclude(fp_keys)
+        f1 = XorFilter.build(keys, self.fp_alpha, seed=self.seed + 31 * new_idx)
+        # stage-2 starts with the table's own keys as positives and the
+        # *current* false positives of stage-1 among older tables' keys
+        older_keys = (np.concatenate([t.keys for t in self.tables])
+                      if self.tables else np.empty(0, np.uint64))
+        older_keys = older_keys[~np.isin(older_keys, keys)]
+        fp = older_keys[f1.query(older_keys)] if len(older_keys) else older_keys
+        f2 = DynamicExactFilter.build(keys, fp, seed=self.seed + 7 * new_idx)
+        # newest-first ordering
+        self.tables.insert(0, SSTable(keys))
+        self.stage1.insert(0, f1)
+        self.stage2.insert(0, f2)
+
+    def _filter_hits(self, key: int) -> list[int]:
+        hits = []
+        k = np.array([key], dtype=np.uint64)
+        for i in range(len(self.tables)):
+            if bool(self.stage1[i].query(k)[0]) and bool(self.stage2[i].query(k)[0]):
+                hits.append(i)
+        return hits
+
+    def point_query(self, key: int) -> tuple[bool, int, int]:
+        """Returns (found, sstable_reads, filter_probes)."""
+        hits = self._filter_hits(key)
+        reads = 0
+        for idx in hits:
+            reads += 1
+            if self.tables[idx].contains(key):
+                return True, reads, len(self.tables)
+            # first false positive ⇒ all later hits are false positives too
+            break
+        return False, reads, len(self.tables)
+
+    @property
+    def filter_bits(self) -> int:
+        return (sum(f.bits for f in self.stage1)
+                + sum(f.bits for f in self.stage2))
+
+
+class LsmLevelBloom:
+    """Baseline: per-SSTable Bloom filter at a given bits/key budget."""
+
+    def __init__(self, bits_per_key: float = 10.0, seed: int = 0):
+        self.tables: list[SSTable] = []
+        self.filters: list[BloomFilter] = []
+        self.bits_per_key = bits_per_key
+        self.seed = seed
+
+    def flush(self, keys: np.ndarray) -> None:
+        keys = np.asarray(np.sort(keys), dtype=np.uint64)
+        if self.bits_per_key <= 0:
+            f = None
+        else:
+            fpr = max(1e-9, 2.0 ** (-self.bits_per_key * np.log(2)))
+            f = BloomFilter.build(keys, float(fpr), seed=self.seed + len(self.filters))
+        self.tables.insert(0, SSTable(keys))
+        self.filters.insert(0, f)
+
+    def point_query(self, key: int) -> tuple[bool, int, int]:
+        k = np.array([key], dtype=np.uint64)
+        reads = 0
+        for i, t in enumerate(self.tables):
+            if self.filters[i] is not None and not bool(self.filters[i].query(k)[0]):
+                continue
+            reads += 1
+            if t.contains(key):
+                return True, reads, len(self.tables)
+        return False, reads, len(self.tables)
+
+    @property
+    def filter_bits(self) -> int:
+        return sum(f.bits for f in self.filters if f is not None)
+
+
+def latency_model(reads: np.ndarray, probes_cost_us: float = 2.0,
+                  read_cost_us: float = 9.0) -> np.ndarray:
+    """Calibrated against the paper's Fig 12: ~12µs floor (memtable+index
+    probes) + ~9µs per SSTable read."""
+    return probes_cost_us * 6.0 + read_cost_us * reads

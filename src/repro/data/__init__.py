@@ -1,0 +1,2 @@
+from .pipeline import SyntheticLMData, DataConfig
+from .dedup import StreamingDedup

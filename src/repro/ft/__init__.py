@@ -1,0 +1,2 @@
+from .supervisor import Supervisor, FailureInjector, TrainResult
+from .straggler import StragglerMonitor

@@ -1,0 +1,46 @@
+"""Shared Pallas-kernel plumbing for the filter probe hot path.
+
+Design (DESIGN.md §3): membership filters are small by construction, so the
+whole table is pinned in VMEM (a 1M-key ChainedFilter is ~1.3 MB « 16 MB);
+query keys stream through the grid in (8, 128)-aligned uint32 blocks — the
+natural VPU tile. Probes are vectorized gathers + bitwise ops; there is no
+scalar path at all.
+
+This container has no TPU: ``interpret=True`` executes kernel bodies on CPU
+for correctness; the BlockSpecs below are the real TPU tiling.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# (sublane, lane) tile of the TPU VPU for 32-bit elements
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def pad_table(table: np.ndarray, multiple: int = BLOCK_COLS) -> np.ndarray:
+    m = len(table)
+    pad = (-m) % multiple
+    if pad:
+        table = np.concatenate([table, np.zeros(pad, dtype=table.dtype)])
+    return table
+
+
+def blockify(hi: np.ndarray, lo: np.ndarray):
+    """Pad key lanes to a whole number of (8,128) blocks; returns
+    (hi2d, lo2d, n_valid)."""
+    n = len(hi)
+    pad = (-n) % BLOCK
+    if pad:
+        z = np.zeros(pad, dtype=np.uint32)
+        hi = np.concatenate([np.asarray(hi, np.uint32), z])
+        lo = np.concatenate([np.asarray(lo, np.uint32), z])
+    rows = len(hi) // BLOCK_COLS
+    return (np.asarray(hi, np.uint32).reshape(rows, BLOCK_COLS),
+            np.asarray(lo, np.uint32).reshape(rows, BLOCK_COLS), n)
+
+
+def unblockify(out2d: jnp.ndarray, n_valid: int) -> jnp.ndarray:
+    return out2d.reshape(-1)[:n_valid]

@@ -1,0 +1,71 @@
+"""jit'd public wrappers: filter object + raw uint64 keys in, bool out.
+
+These handle padding/tiling (common.py) and extract static layout params
+from the core filter objects, so callers never touch BlockSpecs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+from repro.core.bloom import BloomFilter
+from repro.core.bloomier import XorFilter, ExactBloomier
+from repro.core.chained import ChainedFilterAnd
+
+from . import common
+from .bloom_probe import bloom_probe
+from .xor_probe import xor_probe, exact_probe
+from .chained_probe import chained_probe
+
+
+def _prep_keys(keys: np.ndarray):
+    hi, lo = H.np_split_u64(np.asarray(keys, dtype=np.uint64))
+    hi2d, lo2d, n = common.blockify(hi, lo)
+    return jnp.asarray(hi2d), jnp.asarray(lo2d), n
+
+
+def bloom_query(f: BloomFilter, keys: np.ndarray, interpret: bool = True) -> np.ndarray:
+    hi2d, lo2d, n = _prep_keys(keys)
+    words = jnp.asarray(common.pad_table(f.words))
+    out = bloom_probe(words, hi2d, lo2d, m_bits=f.m_bits, k=f.k, seed=f.seed,
+                      interpret=interpret)
+    return np.asarray(common.unblockify(out, n)).astype(bool)
+
+
+def xor_query(f: XorFilter, keys: np.ndarray, interpret: bool = True) -> np.ndarray:
+    hi2d, lo2d, n = _prep_keys(keys)
+    lay = f.tbl.layout
+    table = jnp.asarray(common.pad_table(f.tbl.table))
+    out = xor_probe(table, hi2d, lo2d, mode=lay.mode, seed=lay.seed,
+                    seg_len=lay.seg_len, n_seg=lay.n_seg, alpha=f.tbl.alpha,
+                    fp_seed=f.fp_seed, interpret=interpret)
+    return np.asarray(common.unblockify(out, n)).astype(bool)
+
+
+def exact_query(f: ExactBloomier, keys: np.ndarray, interpret: bool = True) -> np.ndarray:
+    hi2d, lo2d, n = _prep_keys(keys)
+    lay = f.tbl.layout
+    table = jnp.asarray(common.pad_table(f.tbl.table))
+    out = exact_probe(table, hi2d, lo2d, mode=lay.mode, seed=lay.seed,
+                      seg_len=lay.seg_len, n_seg=lay.n_seg,
+                      strategy=f.strategy, bit_seed=f.bit_seed,
+                      interpret=interpret)
+    return np.asarray(common.unblockify(out, n)).astype(bool)
+
+
+def chained_query(f: ChainedFilterAnd, keys: np.ndarray, interpret: bool = True) -> np.ndarray:
+    if f.f1 is None:  # degenerate: exact stage only
+        return exact_query(f.f2, keys, interpret=interpret)
+    hi2d, lo2d, n = _prep_keys(keys)
+    lay1, lay2 = f.f1.tbl.layout, f.f2.tbl.layout
+    t1 = jnp.asarray(common.pad_table(f.f1.tbl.table))
+    t2 = jnp.asarray(common.pad_table(f.f2.tbl.table))
+    out = chained_probe(
+        t1, t2, hi2d, lo2d,
+        l1=(lay1.mode, lay1.seed, lay1.seg_len, lay1.n_seg),
+        l2=(lay2.mode, lay2.seed, lay2.seg_len, lay2.n_seg),
+        alpha=f.f1.tbl.alpha, fp_seed=f.f1.fp_seed,
+        strategy=f.f2.strategy, bit_seed=f.f2.bit_seed,
+        interpret=interpret)
+    return np.asarray(common.unblockify(out, n)).astype(bool)

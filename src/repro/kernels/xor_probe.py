@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Bloomier/XOR-filter probe (3 gathers + XOR + compare).
+
+Covers both the approximate (α-bit fingerprint) and exact (1-bit, strategy
+a/b) Bloomier variants — the exact case is the α=1 path with the fingerprint
+replaced by the strategy bit. Table VMEM-resident, keys in (8,128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hashing as H
+from .common import BLOCK_ROWS, BLOCK_COLS
+
+
+def _slots(hi, lo, *, mode, seed, seg_len, n_seg):
+    if mode == "uniform":
+        return tuple(i * seg_len + H.jx_hash_to_range(hi, lo, seed * 7919 + i, seg_len)
+                     for i in range(3))
+    start = H.jx_hash_to_range(hi, lo, seed * 7919 + 3, n_seg - 2)
+    return tuple((start + i) * seg_len + H.jx_hash_to_range(hi, lo, seed * 7919 + i, seg_len)
+                 for i in range(3))
+
+
+def _lookup(table, hi, lo, *, mode, seed, seg_len, n_seg, alpha):
+    s0, s1, s2 = _slots(hi, lo, mode=mode, seed=seed, seg_len=seg_len, n_seg=n_seg)
+    v = (jnp.take(table, s0, axis=0) ^ jnp.take(table, s1, axis=0)
+         ^ jnp.take(table, s2, axis=0))
+    return v & jnp.uint32((1 << alpha) - 1)
+
+
+def _kernel(table_ref, hi_ref, lo_ref, out_ref, *, mode, seed, seg_len, n_seg,
+            alpha, fp_seed):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    v = _lookup(table_ref[...], hi, lo, mode=mode, seed=seed, seg_len=seg_len,
+                n_seg=n_seg, alpha=alpha)
+    fp = H.jx_hash_u32(hi, lo, fp_seed) & jnp.uint32((1 << alpha) - 1)
+    out_ref[...] = (v == fp).astype(jnp.int32)
+
+
+def _kernel_exact(table_ref, hi_ref, lo_ref, out_ref, *, mode, seed, seg_len,
+                  n_seg, strategy, bit_seed):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    v = _lookup(table_ref[...], hi, lo, mode=mode, seed=seed, seg_len=seg_len,
+                n_seg=n_seg, alpha=1)
+    if strategy == "a":
+        tgt = H.jx_hash_u32(hi, lo, bit_seed) & jnp.uint32(1)
+    else:
+        tgt = jnp.uint32(1)
+    out_ref[...] = (v == tgt).astype(jnp.int32)
+
+
+def _call(kernel, table, hi2d, lo2d, interpret):
+    R = hi2d.shape[0]
+    W = table.shape[0]
+    return pl.pallas_call(
+        kernel,
+        grid=(R // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((W,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, BLOCK_COLS), jnp.int32),
+        interpret=interpret,
+    )(table, hi2d, lo2d)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "seed", "seg_len", "n_seg",
+                                             "alpha", "fp_seed", "interpret"))
+def xor_probe(table, hi2d, lo2d, *, mode: str, seed: int, seg_len: int,
+              n_seg: int, alpha: int, fp_seed: int, interpret: bool = True):
+    k = functools.partial(_kernel, mode=mode, seed=seed, seg_len=seg_len,
+                          n_seg=n_seg, alpha=alpha, fp_seed=fp_seed)
+    return _call(k, table, hi2d, lo2d, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "seed", "seg_len", "n_seg",
+                                             "strategy", "bit_seed", "interpret"))
+def exact_probe(table, hi2d, lo2d, *, mode: str, seed: int, seg_len: int,
+                n_seg: int, strategy: str, bit_seed: int, interpret: bool = True):
+    k = functools.partial(_kernel_exact, mode=mode, seed=seed, seg_len=seg_len,
+                          n_seg=n_seg, strategy=strategy, bit_seed=bit_seed)
+    return _call(k, table, hi2d, lo2d, interpret)

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""FLOP/byte/collective calibration by depth extrapolation.
+
+Scan-over-layers makes full-config compiles tractable, but XLA's
+cost_analysis visits a while-loop body ONCE — flops / bytes / collectives of
+scanned cells are undercounted by ~n_layers. This pass compiles reduced-depth
+UNROLLED variants of each (arch x shape) at the same global shapes and mesh,
+then extrapolates linearly in depth (layers are homogeneous; piecewise for
+the MoE dense prefix and the Zamba2 shared block):
+
+    dense/moe/rwkv/whisper/vlm:  total(L) = f(d1) + (L - d1) * (f(d2) - f(d1))
+    zamba2 (shared every E):     m = f(E+1)-f(E);  s = f(2E)-f(E)-(E-1)m
+                                 total(L) = f(E) + (L-E)m + (L/E - 1)s
+
+Writes artifacts/calib/<arch>__<shape>__<mesh>.json with corrected totals.
+Roofline (benchmarks/roofline.py) prefers these over the raw cell records.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, applicable_shapes
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.sharding.rules import DEFAULT_RULES, SP_RULES
+from repro.launch.hlo_tools import collective_summary, COLLECTIVES
+
+
+def _reduced_model(arch, depth: int, tp: int, kind: str):
+    """Unrolled model with n_layers=depth, same family features."""
+    full = arch.model(smoke=False, tp_divisor=tp)
+    from repro.models.transformer import TransformerLM
+    from repro.models.rwkv6 import RWKV6LM
+    from repro.models.ssm import Zamba2LM
+    from repro.models.encdec import EncDecLM
+    from repro.models.vlm import VLM, VLMConfig
+    remat = kind == "train"
+    q_chunk = 512 if kind == "train" else 1024
+    if isinstance(full, VLM):
+        cfg = VLMConfig(lm=dataclasses.replace(full.cfg.lm, n_layers=depth),
+                        n_patches=full.cfg.n_patches)
+        return VLM(cfg, tp_divisor=tp, q_chunk=q_chunk, remat=remat)
+    if isinstance(full, TransformerLM):
+        cfg = dataclasses.replace(full.cfg, n_layers=depth)
+        return TransformerLM(cfg, tp_divisor=tp, q_chunk=q_chunk, remat=remat)
+    if isinstance(full, RWKV6LM):
+        cfg = dataclasses.replace(full.cfg, n_layers=depth)
+        return RWKV6LM(cfg, chunk=full.chunk, remat=remat)
+    if isinstance(full, Zamba2LM):
+        cfg = dataclasses.replace(full.cfg, n_layers=depth)
+        return Zamba2LM(cfg, chunk=full.chunk, q_chunk=q_chunk, remat=remat)
+    if isinstance(full, EncDecLM):
+        cfg = dataclasses.replace(full.cfg, n_layers=depth)
+        return EncDecLM(cfg, tp_divisor=tp, q_chunk=q_chunk)
+    raise TypeError(type(full))
+
+
+def _measure(arch, shape_name, mesh, rules, depth: int, tp: int) -> dict:
+    kind = SHAPES[shape_name].kind
+    m = _reduced_model(arch, depth, tp, kind)
+    cell = build_cell(arch, shape_name, mesh, rules=rules, smoke=False,
+                      model=m)
+    compiled = cell.lower().compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_summary(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(sum(coll[k] for k in COLLECTIVES))}
+
+
+def _extrapolate(arch, vals: dict, L: int, depths: tuple) -> dict:
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        if arch.family == "hybrid":
+            E = depths[0]
+            fE, fE1, f2E = (vals[d][key] for d in depths)
+            m = fE1 - fE
+            s = f2E - fE - (E - 1) * m
+            out[key] = fE + (L - E) * m + (L // E - 1) * s
+        else:
+            d1, d2 = depths
+            f1, f2 = vals[d1][key], vals[d2][key]
+            out[key] = f1 + (L - d1) * (f2 - f1)
+    return out
+
+
+def depths_for(arch) -> tuple:
+    full = arch.model(smoke=False)
+    cfg = getattr(full, "cfg", None)
+    lm = getattr(cfg, "lm", cfg)
+    if arch.family == "hybrid":
+        E = lm.shared_every
+        return (E, E + 1, 2 * E)
+    fk = getattr(lm, "first_k_dense", 0) if getattr(lm, "n_experts", 0) else 0
+    return (fk + 1, fk + 2)
+
+
+def _measure_fwd(arch, shape_name, mesh, rules, depth: int, tp: int) -> float:
+    """Forward-only flops at reduced depth (for the grouped-remat scan
+    correction: the group-level recompute re-runs one forward pass)."""
+    from repro.launch.steps import (param_shardings, batch_sharding)
+    from repro.configs.base import input_specs
+    from repro.models.common import abstract_from_specs
+    from repro.sharding.ctx import activation_sharding_ctx
+    m = _reduced_model(arch, depth, tp, "prefill")   # remat off
+    p_abs = abstract_from_specs(m.param_specs())
+    p_sh = param_shardings(mesh, rules, m)
+    ispecs = input_specs(arch, shape_name, smoke=False, model=m)
+    b_sh = batch_sharding(mesh, rules, ispecs["batch"])
+
+    def fwd(params, batch):
+        with activation_sharding_ctx(mesh, rules):
+            return m.loss(params, batch)
+    compiled = jax.jit(fwd, in_shardings=(p_sh, b_sh)).lower(
+        p_abs, ispecs["batch"]).compile()
+    return float((compiled.cost_analysis() or {}).get("flops", 0.0))
+
+
+def run_calibration(arch_id: str, shape_name: str, mesh, mesh_name: str,
+                    out_dir: str) -> dict:
+    arch = REGISTRY[arch_id]
+    rules = SP_RULES if SHAPES[shape_name].kind == "train" else DEFAULT_RULES
+    tp = mesh.shape.get("model", 1)
+    full = arch.model(smoke=False, tp_divisor=tp)
+    lm = getattr(getattr(full, "cfg", None), "lm", getattr(full, "cfg", None))
+    L = lm.n_layers
+    depths = depths_for(arch)
+    t0 = time.perf_counter()
+    vals = {d: _measure(arch, shape_name, mesh, rules, d, tp) for d in depths}
+    tot = _extrapolate(arch, vals, L, depths)
+    if SHAPES[shape_name].kind == "train":
+        # grouped-remat scan re-runs one extra forward per group; the
+        # unrolled reference only has the per-layer remat recompute.
+        d1, d2 = depths[0], depths[1]
+        f1, f2 = (_measure_fwd(arch, shape_name, mesh, rules, d, tp)
+                  for d in (d1, d2))
+        fwd_L = f1 + (L - d1) * (f2 - f1)
+        tot["flops_scan_corrected"] = tot["flops"] + fwd_L
+        tot["fwd_flops"] = fwd_L
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "depths": list(depths), "raw": vals, "extrapolated": tot,
+           "n_layers": L, "wall_s": round(time.perf_counter() - t0, 1)}
+    fn = f"{out_dir}/{arch_id}__{shape_name}__{mesh_name}.json"
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[calib] {arch_id:26s} {shape_name:12s} flops={tot['flops']:.3e} "
+          f"bytes={tot['bytes']:.3e} coll={tot['coll']/2**20:9.1f}MiB "
+          f"({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="artifacts/calib")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    mesh_name = "single_pod_16x16"
+    archs = sorted(REGISTRY) if args.arch == "all" else [args.arch]
+    failures = []
+    for aid in archs:
+        shapes = (applicable_shapes(REGISTRY[aid]) if args.shape == "all"
+                  else [args.shape])
+        for sn in shapes:
+            fn = f"{args.out}/{aid}__{sn}__{mesh_name}.json"
+            if args.skip_existing and os.path.exists(fn):
+                continue
+            try:
+                run_calibration(aid, sn, mesh, mesh_name, args.out)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((aid, sn, repr(e)))
+    if failures:
+        print("CALIBRATION FAILURES:", failures)
+        raise SystemExit(1)
+    print("calibration complete")
+
+
+if __name__ == "__main__":
+    main()

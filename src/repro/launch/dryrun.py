@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import/init: jax locks the device count at first use.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and record memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh both --out artifacts/dryrun
+
+Outputs one JSON per (arch, shape, mesh) cell under --out with:
+  memory_analysis (bytes/device), cost_analysis (flops, bytes),
+  collective bytes by op kind (parsed from the optimized HLO),
+  MODEL_FLOPS (6·N·D or 6·N_active·D) and the useful-compute ratio.
+Any compile failure is a bug in the sharding config — it is reported and
+the run exits nonzero.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, applicable_shapes
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.sharding.rules import DEFAULT_RULES
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shape(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+    (Result bytes ≈ operand bytes for these ops; all-gather result is the
+    gathered size, which is the amount moved per device up to a ring
+    factor — the standard roofline convention.)"""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_txt, opname = m.group(1), m.group(2)
+        base = opname.rstrip("0123456789.").removesuffix("-start")
+        base = base.removesuffix("-done")
+        if base in _COLLECTIVES and "-done" not in opname:
+            out[base] += _bytes_of_shape(shape_txt)
+            out["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
+             rules=None, verbose: bool = True) -> dict:
+    arch = REGISTRY[arch_id]
+    if rules is None:
+        # production posture: Megatron-SP sequence-sharded layer boundaries
+        # for training (16x smaller remat stash); plain rules for serving.
+        from repro.sharding.rules import SP_RULES
+        rules = SP_RULES if SHAPES[shape_name].kind == "train" else DEFAULT_RULES
+        if SHAPES[shape_name].kind == "decode":
+            # §Perf iteration B2: when kv_heads don't divide the model axis,
+            # shard decode attention over head_dim (partial-score all-reduce
+            # instead of per-layer KV-cache all-gathers: ~40x less traffic)
+            probe = arch.model(smoke=False)
+            cfg = getattr(probe, "cfg", None)
+            lm = getattr(cfg, "lm", cfg)
+            kvh = getattr(lm, "n_kv_heads", 0)
+            tp = mesh.shape.get("model", 1)
+            if kvh and kvh % tp != 0:
+                rules = DEFAULT_RULES.override(heads=None, head_dim="model")
+    t0 = time.perf_counter()
+    cell = build_cell(arch, shape_name, mesh, rules=rules, smoke=False)
+    lowered = cell.lower()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "bytes accessed output", "optimal_seconds")}
+    hlo = compiled.as_text()
+    from repro.launch.hlo_tools import collective_summary, largest_buffers
+    coll = collective_summary(hlo)
+
+    # --- analytic per-device memory model (DESIGN.md / EXPERIMENTS.md):
+    # CPU buffer assignment does no liveness reuse, so temp_size is a sum,
+    # not a peak. Model the TPU peak as: sharded args (params/opt/cache)
+    # + a gradient buffer (train) + the remat stash of layer-boundary
+    # activations + the largest transient buffers (logits/scores).
+    args_local = cell.arg_local_bytes()
+    stash = 0
+    if cell.kind == "train":
+        cfg = getattr(cell.model, "cfg", None)
+        lmcfg = getattr(cfg, "lm", cfg)
+        L = getattr(lmcfg, "n_layers", 0)
+        if arch.family == "audio":
+            L *= 2
+        D = getattr(lmcfg, "d_model", 0)
+        s_ = SHAPES[shape_name]
+        from repro.sharding.rules import sharding_for_axes
+        sh = sharding_for_axes(mesh, rules, ("batch", "seq_save", None),
+                               (s_.batch, s_.seq, D))
+        loc = sh.shard_shape((s_.batch, s_.seq, D))
+        n_saves = L
+        if getattr(cell.model, "scan", False) or getattr(
+                getattr(cell.model, "lm", None), "scan", False):
+            # grouped-remat scan saves one carry per group (f32-widened by
+            # XLA's loop conversion — counted at 4 bytes, conservative)
+            g = max(d for d in range(1, min(8, L) + 1) if L % d == 0)
+            stash = (L // g) * int(loc[0]) * int(loc[1]) * int(loc[2]) * 4
+        else:
+            stash = L * int(loc[0]) * int(loc[1]) * int(loc[2]) * 2  # bf16
+    # primary model: SSA-liveness peak over the scheduled per-device HLO
+    # (temps incl. grads/stash/transients) + resident arguments. The
+    # component estimates are kept for the breakdown table.
+    from repro.launch.hbm_model import peak_hbm_bytes
+    liveness = peak_hbm_bytes(hlo)
+    transient = sum(largest_buffers(hlo, 4))
+    grads = args_local.get("params", 0) if cell.kind == "train" else 0
+    peak_model = sum(args_local.values()) + liveness
+    mem_model = {"args": args_local, "grads_est": grads,
+                 "remat_stash_est": stash, "transient_top4": transient,
+                 "liveness_peak": int(liveness), "total": int(peak_model)}
+
+    n_total = cell.model.param_count()
+    n_active = cell.model.active_param_count()
+    s = SHAPES[shape_name]
+    tokens = s.batch * s.seq if cell.kind == "train" else s.batch
+    model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "kind": cell.kind, "n_devices": mesh.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_d, "memory_model": mem_model,
+        "cost": cost_d, "collectives": coll,
+        "params_total": int(n_total), "params_active": int(n_active),
+        "model_flops": float(model_flops),
+        "hlo_ops": hlo.count("\n"),
+    }
+    if verbose:
+        flops = cost_d.get("flops", 0.0)
+        print(f"[dryrun] {arch_id:26s} {shape_name:12s} {mesh_name:9s} "
+              f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+              f"flops/dev={flops:.3e} "
+              f"coll={sum(coll[k] for k in _COLLECTIVES)/2**20:9.1f}MiB "
+              f"peak≈{peak_model/2**30:6.2f}GiB "
+              f"(arena={mem_d.get('temp_size_in_bytes', 0)/2**30:.1f}G)",
+              flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel layer boundaries for train")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    import os as _os
+    _os.makedirs(args.out, exist_ok=True)
+    archs = sorted(REGISTRY) if args.arch == "all" else [args.arch]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    rules = DEFAULT_RULES if args.no_sp else None
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for aid in archs:
+            arch = REGISTRY[aid]
+            shapes = (applicable_shapes(arch) if args.shape == "all"
+                      else [args.shape])
+            for sn in shapes:
+                fn = f"{args.out}/{aid}__{sn}__{mesh_name}.json"
+                if args.skip_existing and _os.path.exists(fn):
+                    continue
+                try:
+                    rec = run_cell(aid, sn, mesh, mesh_name, rules=rules)
+                    with open(fn, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((aid, sn, mesh_name, repr(e)))
+    if failures:
+        print("\nDRY-RUN FAILURES (sharding bugs):")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

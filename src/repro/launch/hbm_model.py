@@ -1,0 +1,180 @@
+"""Liveness-based peak-HBM estimator over optimized, scheduled HLO text.
+
+Why: on the CPU backend ``memory_analysis().temp_size_in_bytes`` is the SUM
+of all temporary buffers (the thunk arena does little liveness reuse), so a
+program that peaks at 8 GiB reports 100+ GiB. The TPU buffer assigner reuses
+aggressively; to *prove the program fits* we therefore model TPU-style reuse:
+a linear scan over the per-device HLO schedule tracking each value from its
+def to its last use and taking the running-sum maximum.
+
+Approximations (all conservative unless noted):
+- tuple / get-tuple-element / bitcast are aliases (0 bytes);
+- fusion internals never materialize (true on TPU);
+- while/call/conditional bodies add their own peak at the call site;
+- dynamic-update-slice counts a full copy (TPU usually updates in place —
+  conservative);
+- parameters are counted once, live for the whole program (donation is
+  reported separately by the caller).
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_ALIAS_OPS = ("tuple", "get-tuple-element", "bitcast", "parameter",
+              "constant")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|true_computation|"
+                      r"false_computation|called_computations=\{)%?([\w.\-]+)")
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{", s)
+        if m and not s.startswith("//"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in s:
+            comps[cur].append(s)
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def _shape_of_line(line: str) -> str:
+    m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^ ]+)\s", line)
+    return m.group(1) if m else ""
+
+
+def _op_of_line(line: str) -> str:
+    m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*?\)|[^ ]+)\s+"
+                 r"([\w\-]+)", line)
+    return m.group(1) if m else ""
+
+
+def _peak_of(comp: str, comps: dict, memo: dict) -> int:
+    if comp in memo:
+        return memo[comp]
+    memo[comp] = 0                       # guard recursion
+    lines = comps.get(comp, [])
+    size: dict[str, int] = {}
+    last_use: dict[str, int] = {}
+    defs: list[tuple[str, int, int]] = []   # (name, idx, extra_call_peak)
+    # pass 1: defs and last uses
+    name_at = {}
+    for i, ln in enumerate(lines):
+        dm = _DEF_RE.match(ln)
+        if not dm:
+            continue
+        name = dm.group(1)
+        op = _op_of_line(ln)
+        b = 0 if op in _ALIAS_OPS else _bytes_of(_shape_of_line(ln))
+        callee_peak = 0
+        for cm in _CALL_RE.finditer(ln):
+            callee_peak += _peak_of(cm.group(1), comps, memo)
+        size[name] = b
+        name_at[name] = i
+        defs.append((name, i, callee_peak))
+        body = ln.split("=", 1)[1]
+        # operands may be printed with or without a leading '%'
+        for ref in re.findall(r"%?([\w.\-]+)", body):
+            if ref in name_at and ref != name:
+                last_use[ref] = i
+    # parameters live throughout
+    live = 0
+    peak = 0
+    expire: dict[int, list[str]] = {}
+    for n, i in last_use.items():
+        expire.setdefault(i, []).append(n)
+    for name, i, callee_peak in defs:
+        live += size[name]
+        peak = max(peak, live + callee_peak)
+        for dead in expire.get(i, []):
+            live -= size[dead]
+    memo[comp] = peak
+    return peak
+
+
+def peak_report(hlo_text: str, top: int = 14) -> list[tuple]:
+    """(bytes, name, shape) of the largest live values at the entry peak."""
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+    memo: dict = {}
+    lines = comps.get(entry, [])
+    size, name_at, last_use = {}, {}, {}
+    defs, shapes = [], {}
+    for i, ln in enumerate(lines):
+        dm = _DEF_RE.match(ln)
+        if not dm:
+            continue
+        name = dm.group(1)
+        op = _op_of_line(ln)
+        b = 0 if op in _ALIAS_OPS else _bytes_of(_shape_of_line(ln))
+        callee = sum(_peak_of(cm.group(1), comps, memo)
+                     for cm in _CALL_RE.finditer(ln))
+        size[name] = b
+        shapes[name] = _shape_of_line(ln)[:70]
+        name_at[name] = i
+        defs.append((name, i, callee))
+        body = ln.split("=", 1)[1]
+        for ref in re.findall(r"%?([\w.\-]+)", body):
+            if ref in name_at and ref != name:
+                last_use[ref] = i
+    expire: dict[int, list[str]] = {}
+    for n, i in last_use.items():
+        expire.setdefault(i, []).append(n)
+    live_set: set = set()
+    live = peak = 0
+    peak_set: set = set()
+    for name, i, callee in defs:
+        live += size[name]
+        live_set.add(name)
+        if live + callee > peak:
+            peak = live + callee
+            peak_set = set(live_set)
+        for dead in expire.get(i, []):
+            live -= size[dead]
+            live_set.discard(dead)
+    rows = sorted(((size[n], n, shapes[n]) for n in peak_set
+                   if size[n] > 0), reverse=True)
+    return rows[:top]
+
+
+def peak_hbm_bytes(hlo_text: str) -> int:
+    """Modeled per-device peak for the optimized module (temps only; add
+    argument_size for the full footprint)."""
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+    if entry is None or entry not in comps:
+        # fall back: biggest computation
+        memo: dict = {}
+        return max((_peak_of(c, comps, memo) for c in comps), default=0)
+    return _peak_of(entry, comps, {})

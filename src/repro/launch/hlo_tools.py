@@ -1,0 +1,113 @@
+"""HLO text analysis helpers shared by dryrun / roofline / perf iteration."""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def bytes_of_shape(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_table(hlo_text: str) -> list[dict]:
+    """Every collective op: kind, result shape text, bytes. '-start' ops are
+    counted; their '-done' halves are skipped (same transfer).
+
+    TPU-width correction: XLA:CPU legalizes bf16 into f32 early (promoted
+    all-reduces; f32 dot partials; convert-then-gather). An f32 collective
+    whose data is a convert of a bf16 value would run at bf16 width on TPU —
+    count it at half."""
+    # first pass: def name -> (op, whether any operand-looking ref is bf16)
+    defop: dict = {}
+    deftype: dict = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        name, shape_txt, op = m.groups()
+        defop[name] = op
+        dm = re.match(r"\(?(\w+)\[", shape_txt)
+        deftype[name] = dm.group(1) if dm else ""
+    out = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+                     r"\(([^)]*)\)", ls)
+        if not m:
+            continue
+        shape_txt, opname, operands = m.groups()
+        base = re.sub(r"[.\d]+$", "", opname)
+        if base.endswith("-done"):
+            continue
+        base = base.removesuffix("-start")
+        if base not in COLLECTIVES:
+            continue
+        b = bytes_of_shape(shape_txt)
+        halved = False
+        if "promoted" in ls:
+            b //= 2
+            halved = True
+        elif shape_txt.startswith(("f32", "(f32")):
+            # producer convert / convert-fusion of bf16 => bf16 on TPU wire
+            first = re.match(r"%?([\w.\-]+)", operands.strip())
+            prod = first.group(1) if first else ""
+            if "convert" in defop.get(prod, "") or "convert" in prod:
+                b //= 2
+                halved = True
+        out.append({"kind": base, "shape": shape_txt, "bytes": b,
+                    "halved": halved, "line": ls[:160]})
+    return out
+
+
+def collective_summary(hlo_text: str) -> dict:
+    table = collective_table(hlo_text)
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = len(table)
+    for r in table:
+        out[r["kind"]] += r["bytes"]
+    return out
+
+
+def largest_buffers(hlo_text: str, k: int = 6) -> list[int]:
+    """k largest distinct non-parameter value sizes in the module — the
+    transient high-water candidates (schedule-independent)."""
+    seen = set()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        if m.group(2) in ("parameter", "tuple", "get-tuple-element", "bitcast"):
+            continue
+        seen.add(bytes_of_shape(m.group(1)))
+    return sorted(seen, reverse=True)[:k]
+
+
+def top_collectives(hlo_text: str, n: int = 12) -> list[tuple]:
+    """Aggregate by (kind, shape) — the what-to-fix view for §Perf."""
+    agg: dict[tuple, list] = {}
+    for r in collective_table(hlo_text):
+        k = (r["kind"], r["shape"])
+        a = agg.setdefault(k, [0, 0])
+        a[0] += r["bytes"]
+        a[1] += 1
+    rows = sorted(((v[0], v[1], k) for k, v in agg.items()), reverse=True)
+    return rows[:n]

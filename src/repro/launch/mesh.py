@@ -1,0 +1,24 @@
+"""Production meshes. Functions, not module constants — importing this
+module never touches jax device state (the dry-run sets
+xla_force_host_platform_device_count BEFORE first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 across two pods. The 'pod'
+    axis is the low-bandwidth (DCN) dimension and carries only the
+    data-parallel gradient all-reduce by default."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names as single-pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf iteration tool: compile ONE cell under a rules/knob variant and
+print the roofline-relevant deltas (collective bytes by op+shape, liveness
+peak, flops) — the measure step of hypothesis → change → measure."""
+import argparse
+import json
+
+import jax
+
+from repro.configs import REGISTRY
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.launch.hlo_tools import (collective_summary, top_collectives,
+                                    COLLECTIVES)
+from repro.launch.hbm_model import peak_hbm_bytes, peak_report
+from repro.sharding.rules import DEFAULT_RULES, SP_RULES
+
+
+def measure(arch_id, shape_name, rules, label, q_chunk=None, report=False):
+    mesh = make_production_mesh(multi_pod=False)
+    arch = REGISTRY[arch_id]
+    cell = build_cell(arch, shape_name, mesh, rules=rules, smoke=False,
+                      q_chunk=q_chunk)
+    compiled = cell.lower().compile()
+    hlo = compiled.as_text()
+    cs = collective_summary(hlo)
+    coll = sum(cs[k] for k in COLLECTIVES)
+    cost = compiled.cost_analysis() or {}
+    live = peak_hbm_bytes(hlo)
+    args = sum(cell.arg_local_bytes().values())
+    print(f"\n==== {label}: {arch_id} {shape_name}")
+    print(f"  collective total {coll/2**30:8.2f} GiB   "
+          f"(AR {cs['all-reduce']/2**30:.2f} AG {cs['all-gather']/2**30:.2f} "
+          f"RS {cs['reduce-scatter']/2**30:.2f} A2A {cs['all-to-all']/2**30:.2f})")
+    print(f"  flops/dev (scan-raw) {cost.get('flops', 0):.3e}   "
+          f"bytes {cost.get('bytes accessed', 0):.3e}")
+    print(f"  peak HBM modeled {(live+args)/2**30:8.2f} GiB "
+          f"(args {args/2**30:.2f} + live {live/2**30:.2f})")
+    print("  top collectives:")
+    for b, c, (kind, shape) in top_collectives(hlo, 8):
+        print(f"    {b/2**20:9.1f} MiB x{c:4d} {kind:15s} {shape[:70]}")
+    if report:
+        print("  live at peak:")
+        for b, n, s in peak_report(hlo, 8):
+            print(f"    {b/2**20:9.1f} MiB  {n[:44]:44s} {s}")
+    return {"coll": coll, "cs": cs, "live": live, "args": args,
+            "flops": cost.get("flops", 0.0)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--rules", default="auto")
+    ap.add_argument("--report", action="store_true")
+    a = ap.parse_args()
+    rules = (SP_RULES if SHAPES[a.shape].kind == "train" else DEFAULT_RULES) \
+        if a.rules == "auto" else DEFAULT_RULES
+    measure(a.arch, a.shape, rules, a.rules, report=a.report)

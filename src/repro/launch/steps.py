@@ -1,0 +1,193 @@
+"""Step builders: jitted train / prefill / serve steps with explicit
+in/out shardings derived from the logical-axis rule engine.
+
+``build_cell`` is the single entry used by the dry-run, the trainer and the
+benchmarks: given (arch, shape, mesh, rules) it returns the jitted function
+plus the abstract inputs and shardings for every argument — so lowering,
+compiling, and real execution all share one code path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import (abstract_from_specs, axes_from_specs,
+                                 init_from_specs)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_step
+from repro.sharding.rules import ShardingRules, DEFAULT_RULES, tree_shardings
+from repro.sharding.ctx import activation_sharding_ctx
+from repro.configs.base import ArchDef, SHAPES, SMOKE_SHAPES, input_specs
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh, rules: ShardingRules, specs: dict):
+    """tokens/labels [B,S] + modality [B,...]: batch over ('pod','data')."""
+    def one(sds):
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        from repro.sharding.rules import sharding_for_axes
+        return sharding_for_axes(mesh, rules, axes, sds.shape)
+    return jax.tree.map(one, specs)
+
+
+def param_shardings(mesh, rules, model):
+    specs = model.param_specs()
+    return tree_shardings(mesh, rules, axes_from_specs(specs),
+                          abstract_from_specs(specs))
+
+
+def opt_shardings(mesh, rules, model, params_sh):
+    return {"m": params_sh, "v": params_sh,
+            "step": NamedSharding(mesh, P())}
+
+
+def cache_shardings(mesh, rules, model, B, S):
+    return tree_shardings(mesh, rules, model.cache_axes(),
+                          model.cache_specs(B, S))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, mesh, rules, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        with activation_sharding_ctx(mesh, rules):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = adamw_step(opt_cfg, params, grads,
+                                                opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(model, mesh, rules, max_len: int):
+    def prefill_step(params, batch):
+        with activation_sharding_ctx(mesh, rules):
+            return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_serve_step(model, mesh, rules):
+    def serve_step(params, cache, tokens):
+        with activation_sharding_ctx(mesh, rules):
+            return model.decode_step(params, cache, tokens)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    jitted: object          # jax.jit-wrapped step
+    abstract_args: tuple    # ShapeDtypeStructs to .lower(*args)
+    model: object
+    in_shardings: tuple = ()
+
+    def lower(self):
+        return self.jitted.lower(*self.abstract_args)
+
+    def arg_local_bytes(self) -> dict:
+        """Per-device bytes of each argument group, from the shardings."""
+        import numpy as _np
+        def local(leaf, sh):
+            shape = sh.shard_shape(leaf.shape) if hasattr(sh, "shard_shape") \
+                else leaf.shape
+            return int(_np.prod(shape, dtype=_np.int64)) * leaf.dtype.itemsize
+        out = {}
+        names = {"train": ("params", "opt", "batch"),
+                 "prefill": ("params", "batch"),
+                 "decode": ("params", "cache", "tokens")}[self.kind]
+        for name, tree, shs in zip(names, self.abstract_args, self.in_shardings):
+            tot = sum(jax.tree.leaves(jax.tree.map(local, tree, shs)))
+            out[name] = int(tot)
+        return out
+
+
+def build_cell(arch: ArchDef, shape_name: str, mesh,
+               rules: ShardingRules = DEFAULT_RULES, smoke: bool = False,
+               opt_cfg: AdamWConfig | None = None, remat: bool = True,
+               donate: bool = True, q_chunk: int | None = None,
+               model=None) -> Cell:
+    """Assemble the jitted step + abstract inputs for one (arch x shape)."""
+    import inspect
+    table = SMOKE_SHAPES if smoke else SHAPES
+    s = table[shape_name]
+    tp = mesh.shape.get("model", 1)
+    if q_chunk is None:
+        # training wants small score chunks (activation memory); prefill can
+        # afford larger; decode has Sq=1 so it is irrelevant.
+        q_chunk = 512 if s.kind == "train" else 1024
+    if model is not None:
+        m = model
+    else:
+        # scan-over-layers for full (non-smoke) configs: compile time
+        # ~constant in depth; smoke tests stay unrolled (both modes tested).
+        kw = {"remat": remat, "q_chunk": q_chunk, "scan_layers": not smoke}
+        # model constructors accept different subsets — filter by signature
+        try:
+            mdl_probe = arch.model(smoke=True)      # cheap: discover class
+            sig_params = inspect.signature(type(mdl_probe).__init__).parameters
+            kw = {k: v for k, v in kw.items() if k in sig_params}
+        except Exception:
+            kw = {}
+        m = arch.model(smoke=smoke, tp_divisor=tp, **kw)
+
+    pspecs = m.param_specs()
+    p_abs = abstract_from_specs(pspecs)
+    if s.kind != "train":
+        # serving keeps bf16 weights (cast once at checkpoint load): halves
+        # FSDP weight gathers and the resident parameter bytes.
+        p_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, p_abs)
+    p_sh = param_shardings(mesh, rules, m)
+
+    if s.kind == "train":
+        ospecs = jax.eval_shape(adamw_init, p_abs)
+        o_sh = opt_shardings(mesh, rules, m, p_sh)
+        ispecs = input_specs(arch, shape_name, smoke=smoke, model=m)
+        b_sh = batch_sharding(mesh, rules, ispecs["batch"])
+        fn = make_train_step(m, mesh, rules, opt_cfg or AdamWConfig())
+        jitted = jax.jit(fn,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1) if donate else ())
+        args = (p_abs, ospecs, ispecs["batch"])
+        in_sh = (p_sh, o_sh, b_sh)
+    elif s.kind == "prefill":
+        ispecs = input_specs(arch, shape_name, smoke=smoke, model=m)
+        b_sh = batch_sharding(mesh, rules, ispecs["batch"])
+        # VLMs prepend the visual prefix to the decoder cache
+        extra = getattr(getattr(m, "cfg", None), "n_patches", 0)
+        c_sh = cache_shardings(mesh, rules, m, s.batch, s.seq + extra)
+        fn = make_prefill_step(m, mesh, rules, max_len=s.seq + extra)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                         out_shardings=(None, c_sh))
+        args = (p_abs, ispecs["batch"])
+        in_sh = (p_sh, b_sh)
+    else:  # decode
+        ispecs = input_specs(arch, shape_name, smoke=smoke, model=m)
+        c_abs = ispecs["cache"]
+        c_sh = cache_shardings(mesh, rules, m, s.batch, s.seq)
+        t_sh = batch_sharding(mesh, rules, {"tokens": ispecs["tokens"]})["tokens"]
+        fn = make_serve_step(m, mesh, rules)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,) if donate else ())
+        args = (p_abs, c_abs, ispecs["tokens"])
+        in_sh = (p_sh, c_sh, t_sh)
+
+    return Cell(arch_id=arch.arch_id, shape_name=shape_name, kind=s.kind,
+                jitted=jitted, abstract_args=args, model=m, in_shardings=in_sh)

@@ -1,0 +1,324 @@
+"""Shared model substrate: param specs with logical sharding axes, norms,
+rotary embeddings, attention (dense + q-chunked online-softmax), MoE.
+
+Conventions
+-----------
+- Params are nested dicts of arrays; every leaf has a parallel ``ParamSpec``
+  carrying its *logical axes* (e.g. ('embed', 'mlp')). ``sharding/rules.py``
+  maps logical axes onto mesh axes.
+- Layers are stored unstacked (``layers/<i>/...``) and applied in an
+  unrolled python loop: exact HLO FLOP accounting for the dry-run (scan
+  bodies are costed once by XLA — see DESIGN.md), and scan is unnecessary
+  at the ~100M scale the CPU examples train.
+- Compute dtype bf16, params/optimizer f32 master (policy below), softmax
+  and losses f32.
+- Attention: ``dense_attention`` materializes scores per q-chunk only; the
+  q-chunk loop is a python unroll so *all* FLOPs appear in the HLO.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple            # logical axis names, same rank as shape
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"   # 'normal' | 'zeros' | 'ones'
+    scale: float = 1.0
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def init_from_specs(specs, rng: jax.Array):
+    """Materialize a pytree of ParamSpec into real arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) else 1
+            std = spec.scale / math.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * std).astype(spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_from_specs(specs):
+    return jax.tree.map(lambda s: s.abstract(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_from_specs(specs):
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def set_compute_dtype(dtype) -> None:
+    """bf16 is the TPU target dtype (dry-run lowering / roofline bytes).
+    The CPU backend cannot *execute* every bf16 dot, so smoke tests and
+    examples switch to f32 — numerics-only, the model code is identical."""
+    global COMPUTE_DTYPE
+    COMPUTE_DTYPE = jnp.dtype(dtype)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray, meta) -> jnp.ndarray:
+    """Embedding gather whose TRANSPOSE keeps the table gradient sharded.
+
+    The autodiff transpose of a plain ``take`` is a scatter-add onto an
+    unannotated zeros[V, D]; GSPMD replicates it — a full f32 table gradient
+    per device plus a table-sized all-reduce. Here the backward builds the
+    zeros WITH the table's sharding constraint and accumulates in bf16, so
+    the partitioner keeps the (V/model, D/data) layout end to end.
+    """
+    return jnp.take(table.astype(COMPUTE_DTYPE), tokens, axis=0)
+
+
+def _embed_fwd(table, tokens, meta):
+    return _embed_lookup(table, tokens, meta), tokens
+
+
+def _embed_bwd(meta, tokens, dx):
+    from repro.sharding.ctx import shard_activation
+    tshape, tdtype = meta
+    zeros = jnp.zeros(tshape, dx.dtype)
+    zeros = shard_activation(zeros, ("vocab", "embed"))
+    flat_idx = tokens.reshape(-1)
+    flat_dx = dx.reshape(-1, tshape[1])
+    dE = zeros.at[flat_idx].add(flat_dx)
+    dE = shard_activation(dE, ("vocab", "embed")).astype(tdtype)
+    return dE, None
+
+
+_embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return _embed_lookup(table, tokens,
+                         (tuple(table.shape), str(table.dtype)))
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float = 1e4):
+    """positions [*(B,)S] -> (cos, sin) [..., dim/2] f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, H, dh]; cos/sin broadcastable [..., S, 1, dh/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token cross entropy; logits [B,S,V] any float, labels int32."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q [B,Sq,H,dh], k [B,Sk,Hkv,dh] -> scores [B,H,Sq,Sk] (f32)."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    return s.reshape(B, Hkv * g, Sq, k.shape[1])
+
+
+def _gqa_out(p, v):
+    """p [B,H,Sq,Sk] f32, v [B,Sk,Hkv,dh] -> [B,Sq,H,dh]."""
+    B, H, Sq, Sk = p.shape
+    Hkv = v.shape[2]
+    g = H // Hkv
+    pg = p.reshape(B, Hkv, g, Sq, Sk)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pg.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, v.shape[3])
+
+
+def dense_attention(q, k, v, *, causal: bool, q_chunk: int = 4096,
+                    q_offset=0, window: int | None = None,
+                    kv_valid_len=None) -> jnp.ndarray:
+    """Numerically-standard softmax attention, q-chunked (python unroll) so
+    peak score memory is [B,H,q_chunk,Sk] while every FLOP appears in HLO.
+
+    q_offset: global position of q[0] (decode: cache length). kv_valid_len:
+    mask out cache positions >= this (decode with static cache).
+    """
+    from repro.sharding.ctx import shard_activation
+    q = shard_activation(q, ("batch", "seq", "heads", "head_dim"))
+    if q.shape[1] == 1:
+        # decode: keep the KV cache head_dim-sharded; the q·k contraction
+        # over the sharded head_dim yields PARTIAL scores ([B,H,1,Sk], tiny)
+        # + all-reduce — instead of per-layer all-gathers of the cache.
+        kv_ax = ("batch", "seq_kv", "kv_heads", "kv_cache_head_dim")
+    else:
+        # train/prefill: k/v are fresh transients; replicate head_dim so the
+        # heads-sharded q contracts locally (scores stay head-sharded).
+        kv_ax = ("batch", "seq_kv", "kv_heads", None)
+    k = shard_activation(k, kv_ax)
+    v = shard_activation(v, kv_ax)
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    kpos = jnp.arange(Sk)
+    outs = []
+    n_chunks = max(1, (Sq + q_chunk - 1) // q_chunk)
+    for ci in range(n_chunks):
+        lo = ci * q_chunk
+        hi = min(Sq, lo + q_chunk)
+        qc = q[:, lo:hi]
+        s = _gqa_scores(qc, k) * scale                     # [B,H,cq,Sk] f32
+        qpos = q_offset + jnp.arange(lo, hi)
+        neg = jnp.float32(-1e30)
+        if causal:
+            m = kpos[None, :] > qpos[:, None]
+            if window is not None:
+                m |= kpos[None, :] <= (qpos[:, None] - window)
+            s = jnp.where(m[None, None], neg, s)
+        if kv_valid_len is not None:
+            s = jnp.where((kpos >= kv_valid_len)[None, None, None, :], neg, s)
+        p = jax.nn.softmax(s, axis=-1)
+        outs.append(_gqa_out(p, v).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def swiglu(x, wi_gate, wi_up, wo):
+    from repro.sharding.ctx import shard_activation
+    # bf16 dot outputs (f32 MXU accumulation): backward cotangents and
+    # any boundary all-gathers stay at bf16 wire width (§Perf A4)
+    h = jnp.einsum("bsd,df->bsf", x, wi_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, wi_up.astype(x.dtype))
+    h = shard_activation(h, ("batch", "seq", "mlp"))
+    u = shard_activation(u, ("batch", "seq", "mlp"))
+    h = (jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u)
+    # row-parallel output: bf16 partials => bf16 TP all-reduce (half wire)
+    return jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype))
+
+
+def moe_block(x, params, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
+              group_size: int = 4096):
+    """Token-choice top-k MoE with grouped one-hot dispatch (Mesh-TF style).
+
+    x [B,S,D]. Experts' weights are stacked on a leading 'expert' axis and
+    shard over the model axis (expert parallelism); the dispatch/combine
+    einsums lower to all-to-alls under GSPMD. Tokens beyond per-expert
+    capacity within a group are dropped (standard capacity-factor MoE).
+    """
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    gates = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(gates, axis=-1)
+    gval, gidx = jax.lax.top_k(probs, top_k)               # [T,k]
+    gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+
+    G = max(1, T // group_size)
+    Tg = T // G
+    # ceil-capacity with a small-group floor: tiny token counts (decode /
+    # short prefill) are effectively dropless — dropping at T=B·1 corrupts
+    # generation; the floor is far below train-scale capacities (≥480).
+    cap = min(Tg * top_k,
+              max(math.ceil(capacity_factor * Tg * top_k / n_experts), 32))
+
+    xt_g = xt.reshape(G, Tg, D)
+    gidx_g = gidx.reshape(G, Tg, top_k)
+    gval_g = gval.reshape(G, Tg, top_k)
+
+    onehot = jax.nn.one_hot(gidx_g, n_experts, dtype=jnp.float32)   # [G,Tg,k,E]
+    # position within expert counted over the FLATTENED (token, choice)
+    # order — a per-choice cumsum lets different k-slots collide on the
+    # same capacity slot and silently sum two tokens' activations.
+    oh_flat = onehot.reshape(G, Tg * top_k, n_experts)
+    pos_flat = jnp.cumsum(oh_flat, axis=1) - oh_flat
+    pos = jnp.einsum("gfe,gfe->gf", pos_flat, oh_flat).reshape(G, Tg, top_k)
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)            # [G,Tg,E,cap]
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh, gval_g)  # combine wts
+
+    from repro.sharding.ctx import shard_activation
+    xe = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xt_g,
+                    preferred_element_type=jnp.float32).astype(x.dtype)  # [G,E,cap,D]
+    xe = shard_activation(xe, ("batch", "expert", None, None))
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", xe, params["wi_up"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    h = shard_activation(h, ("batch", "expert", None, "mlp"))
+    u = shard_activation(u, ("batch", "expert", None, "mlp"))
+    h = (jax.nn.silu(h) * u).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(x.dtype))
+    ye = shard_activation(ye, ("batch", "expert", None, None))
+    yt = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
+    return yt.reshape(B, S, D)
+
+
+def moe_param_specs(d_model: int, d_ff: int, n_experts: int) -> dict:
+    return {
+        "router": ParamSpec((d_model, n_experts), ("embed", "expert_router")),
+        "wi_gate": ParamSpec((n_experts, d_model, d_ff), ("expert", "embed", "mlp")),
+        "wi_up": ParamSpec((n_experts, d_model, d_ff), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((n_experts, d_ff, d_model), ("expert", "mlp", "embed")),
+    }
+
+
+def swiglu_param_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wi_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def pad_heads(n_heads: int, divisor: int) -> int:
+    """Zero-padded head count for TP divisibility (DESIGN.md §5): padded
+    heads have zero W_q/W_o rows — bitwise-exact, extra FLOPs accounted."""
+    return ((n_heads + divisor - 1) // divisor) * divisor

@@ -1,0 +1,365 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free LM backbone.
+
+Time mixing: per-head matrix state S ∈ R^{dk×dv}, data-dependent per-channel
+decay w_t (the Finch hallmark: low-rank LoRA on the decay), bonus u for the
+current token:
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    y_t = r_tᵀ (S_{t-1} + diag(u ⊙ k_t) v_tᵀ)
+
+TPU adaptation (DESIGN.md §3): the recurrence is evaluated in **chunks** so
+the MXU sees matmuls, with a `lax.scan` carrying the state across chunks.
+Overflow-safe decay factorization: with clw = inclusive cumsum of log w over
+the chunk and clw_L its final row,
+
+    A[t,s] = (r_t ⊙ e^{clw_{t-1} − clw_L}) · (k_s ⊙ e^{clw_L − clw_s}),  s<t
+
+both factors have non-positive exponents (bounded ≤ 1), so the intra-chunk
+score matrix is exact with no overflow and no NaN-under-mask in the backward
+pass. Cross-chunk and state-update terms are bounded the same way.
+
+Channel mixing: token-shift lerp + squared-ReLU MLP (RWKV6 form).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamSpec
+from repro.sharding.ctx import shard_activation
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    vocab_pad_to: int = 1
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab + m - 1) // m) * m
+
+    def param_count(self) -> int:
+        D, F = self.d_model, self.d_ff
+        per_layer = 5 * D * D + 2 * D * self.decay_lora + (2 * D * F + D * D) + 8 * D
+        return 2 * self.vocab * D + self.n_layers * per_layer
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def _chunk_wkv(r, k, v, lw, u, state0, chunk: int):
+    """Chunked RWKV6 recurrence.
+
+    r,k,v: [B,S,H,dh] (dk == dv == dh), lw: [B,S,H,dh] log-decays (< 0),
+    u: [H,dh] bonus, state0: [B,H,dh,dh] f32. Returns (y [B,S,H,dh] f32,
+    state [B,H,dh,dh]).
+    """
+    B, S, H, dh = r.shape
+    T = min(chunk, S)
+    n = S // T
+    assert S % T == 0, f"seq {S} not divisible by chunk {T}"
+    rc = r.reshape(B, n, T, H, dh).astype(jnp.float32)
+    kc = k.reshape(B, n, T, H, dh).astype(jnp.float32)
+    vc = v.reshape(B, n, T, H, dh).astype(jnp.float32)
+    lwc = lw.reshape(B, n, T, H, dh).astype(jnp.float32)
+
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32), k=-1)   # strict lower
+
+    def body(S0, inp):
+        rc, kc, vc, lwc = inp                              # [B,T,H,dh]
+        clw = jnp.cumsum(lwc, axis=1)                      # inclusive
+        clw_prev = clw - lwc                               # exclusive
+        clw_L = clw[:, -1:, :, :]                          # [B,1,H,dh]
+        r_hat = rc * jnp.exp(clw_prev - clw_L)             # ≤ |r|
+        k_hat = kc * jnp.exp(clw_L - clw)                  # ≤ |k|
+        # intra-chunk scores (strictly causal) + same-token bonus
+        A = jnp.einsum("bthd,bshd->bhts", r_hat, k_hat)
+        A = A * mask[None, None]
+        diag = jnp.einsum("bthd,bthd->bth", rc, u[None, None] * kc)
+        y = jnp.einsum("bhts,bshd->bthd", A, vc)
+        y = y + diag[..., None] * vc
+        # cross-chunk: r̃_t = r_t ⊙ e^{clw_prev}
+        r_tld = rc * jnp.exp(clw_prev)
+        y = y + jnp.einsum("bthk,bhkv->bthv", r_tld, S0)
+        # state update: S1 = e^{clw_L} ⊙_k S0 + k̂ᵀ V
+        S1 = jnp.exp(clw_L)[:, 0, :, :, None] * S0 + jnp.einsum(
+            "bthk,bthv->bhkv", k_hat, vc)
+        return S1, y
+
+    inp = tuple(x.transpose(1, 0, 2, 3, 4) for x in (rc, kc, vc, lwc))
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), inp)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return y, state
+
+
+def _token_shift(x, last):
+    """x [B,S,D]; last [B,D] (previous token of the stream, zeros at start).
+    Returns x shifted right by one along S."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+class RWKV6LM:
+    def __init__(self, cfg: RWKV6Config, chunk: int = 64,
+                 scan_layers: bool = False, remat: bool = False):
+        self.cfg = cfg
+        self.chunk = chunk
+        self.scan = scan_layers
+        self.remat = remat
+
+    # ------------------------------------------------------------- params
+    def _layer_specs_one(self):
+        c, D, F = self.cfg, self.cfg.d_model, self.cfg.d_ff
+        H, dh, L = c.n_heads, c.head_dim, c.decay_lora
+        return {
+            "ln1": ParamSpec((D,), ("embed",), init="ones"),
+            "ln2": ParamSpec((D,), ("embed",), init="ones"),
+            "time": {
+                "mu_r": ParamSpec((D,), ("embed",), init="zeros"),
+                "mu_k": ParamSpec((D,), ("embed",), init="zeros"),
+                "mu_v": ParamSpec((D,), ("embed",), init="zeros"),
+                "mu_g": ParamSpec((D,), ("embed",), init="zeros"),
+                "mu_w": ParamSpec((D,), ("embed",), init="zeros"),
+                "wr": ParamSpec((D, H, dh), ("embed", "heads", "head_dim")),
+                "wk": ParamSpec((D, H, dh), ("embed", "heads", "head_dim")),
+                "wv": ParamSpec((D, H, dh), ("embed", "heads", "head_dim")),
+                "wg": ParamSpec((D, H, dh), ("embed", "heads", "head_dim")),
+                "wo": ParamSpec((H, dh, D), ("heads", "head_dim", "embed")),
+                # data-dependent decay: w = w0 + tanh(x A) B  (Finch LoRA)
+                "w0": ParamSpec((H, dh), ("heads", "head_dim"), init="zeros"),
+                "wa": ParamSpec((D, L), ("embed", None), scale=0.1),
+                "wb": ParamSpec((L, H, dh), (None, "heads", "head_dim"), scale=0.1),
+                "u": ParamSpec((H, dh), ("heads", "head_dim"), init="zeros"),
+                "ln_x": ParamSpec((H * dh,), ("embed",), init="ones"),
+            },
+            "chan": {
+                "mu_k": ParamSpec((D,), ("embed",), init="zeros"),
+                "mu_r": ParamSpec((D,), ("embed",), init="zeros"),
+                "wk": ParamSpec((D, F), ("embed", "mlp")),
+                "wv": ParamSpec((F, D), ("mlp", "embed")),
+                "wr": ParamSpec((D, D), ("embed", "ssm_inner")),
+            },
+        }
+
+    def param_specs(self):
+        c = self.cfg
+        V = c.padded_vocab
+        if self.scan:
+            from .transformer import _stack_specs
+            layers = _stack_specs(self._layer_specs_one(), c.n_layers)
+        else:
+            layers = [self._layer_specs_one() for _ in range(c.n_layers)]
+        return {
+            "embed": ParamSpec((V, c.d_model), ("vocab", "embed")),
+            "layers": layers,
+            "ln_f": ParamSpec((c.d_model,), ("embed",), init="ones"),
+            "lm_head": ParamSpec((c.d_model, V), ("embed", "vocab")),
+        }
+
+    # ------------------------------------------------------------ mixing
+    def _log_decay(self, tp, xw):
+        """xw [B,S,D] -> log w ∈ (-inf, 0): w = exp(-exp(w0 + lora))."""
+        lora = jnp.einsum("bsd,dl->bsl", xw, tp["wa"].astype(xw.dtype),
+                          preferred_element_type=jnp.float32)
+        lora = jnp.einsum("bsl,lhk->bshk", jnp.tanh(lora).astype(xw.dtype),
+                          tp["wb"].astype(xw.dtype),
+                          preferred_element_type=jnp.float32)
+        raw = tp["w0"][None, None].astype(jnp.float32) + lora.astype(jnp.float32)
+        return -jnp.exp(jnp.clip(raw, -8.0, 4.0)) - 1e-6   # strictly < 0
+
+    def _time_mix(self, tp, x, last_x, state0):
+        """x [B,S,D] -> (y [B,S,D], new_last_x [B,D], state)."""
+        c = self.cfg
+        B, S, D = x.shape
+        H, dh = c.n_heads, c.head_dim
+        xx = _token_shift(x, last_x)
+        def lerp(mu):
+            m = mu[None, None].astype(x.dtype)
+            return x + (xx - x) * m
+        xr, xk, xv, xg, xw = (lerp(tp[k]) for k in ("mu_r", "mu_k", "mu_v",
+                                                    "mu_g", "mu_w"))
+        proj = lambda t, w: jnp.einsum(
+            "bsd,dhk->bshk", t, w.astype(x.dtype),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+        r, k, v, g = proj(xr, tp["wr"]), proj(xk, tp["wk"]), proj(xv, tp["wv"]), proj(xg, tp["wg"])
+        lw = self._log_decay(tp, xw)                        # [B,S,H,dh] f32
+        u = tp["u"].astype(jnp.float32)
+        y, state = _chunk_wkv(r, k, v, lw, u, state0, self.chunk)
+        # per-head group norm then output proj
+        yf = y.reshape(B, S, H * dh)
+        yf = C.rms_norm(yf.astype(x.dtype), tp["ln_x"])
+        y = yf.reshape(B, S, H, dh) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bshk,hkd->bsd", y, tp["wo"].astype(x.dtype))
+        return out, x[:, -1, :], state
+
+    def _chan_mix(self, cp, x, last_x):
+        xx = _token_shift(x, last_x)
+        xk = x + (xx - x) * cp["mu_k"][None, None].astype(x.dtype)
+        xr = x + (xx - x) * cp["mu_r"][None, None].astype(x.dtype)
+        k = jnp.einsum("bsd,df->bsf", xk, cp["wk"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+        kv = jnp.einsum("bsf,fd->bsd", k, cp["wv"].astype(x.dtype))
+        r = jnp.einsum("bsd,de->bse", xr, cp["wr"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        return jax.nn.sigmoid(r).astype(x.dtype) * kv, x[:, -1, :]
+
+    # ------------------------------------------------------------ forward
+    def _zero_cache(self, B, dtype):
+        c = self.cfg
+        return {"xt": jnp.zeros((B, c.d_model), dtype),
+                "xc": jnp.zeros((B, c.d_model), dtype),
+                "s": jnp.zeros((B, c.n_heads, c.head_dim, c.head_dim),
+                               jnp.float32)}
+
+    def _layer_apply(self, lp, x, cache):
+        h, nxt, s1 = self._time_mix(lp["time"], C.rms_norm(x, lp["ln1"]),
+                                    cache["xt"].astype(x.dtype), cache["s"])
+        x = x + h
+        h, nxc = self._chan_mix(lp["chan"], C.rms_norm(x, lp["ln2"]),
+                                cache["xc"].astype(x.dtype))
+        x = x + h
+        x = shard_activation(x, ("batch", "seq_save", None))
+        return x, {"xt": nxt, "xc": nxc, "s": s1}
+
+    def _backbone(self, params, x, caches=None):
+        c = self.cfg
+        B = x.shape[0]
+        if not self.scan:
+            new_caches = []
+            for i, lp in enumerate(params["layers"]):
+                cache = (self._zero_cache(B, x.dtype) if caches is None
+                         else caches[i])
+                x, nc = self._layer_apply(lp, x, cache)
+                new_caches.append(nc)
+            return x, new_caches
+
+        # scan mode: stacked layer params [L, ...]
+        L = c.n_layers
+        if caches is None and self.remat:
+            # train: zero states built INSIDE the body (no stacked-zeros
+            # buffer), grouped remat divides the carry stash by g
+            g = max(d for d in range(1, min(8, L) + 1) if L % d == 0)
+            params_g = jax.tree.map(
+                lambda a: a.reshape((L // g, g) + a.shape[1:]),
+                params["layers"])
+
+            def one(x, lp):
+                x, _ = self._layer_apply(lp, x, self._zero_cache(B, x.dtype))
+                return x, None
+
+            inner = jax.checkpoint(one)
+
+            def group(x, lp_g):
+                x, _ = jax.lax.scan(inner, x, lp_g)
+                return x, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(group), x, params_g)
+            return x, None
+
+        if caches is None:   # prefill (fresh state): zeros threaded as xs
+            zero = self._zero_cache(B, x.dtype)
+            caches = jax.tree.map(
+                lambda a: jnp.zeros((L,) + a.shape, a.dtype), zero)
+
+        def body(x, sl):
+            lp, cache_l = sl
+            return self._layer_apply(lp, x, cache_l)
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+        return x, new_caches
+
+    def _logits(self, params, x):
+        lg = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        from repro.sharding.ctx import shard_activation
+        lg = shard_activation(lg, ("batch", "seq", "vocab"))
+        c = self.cfg
+        if c.padded_vocab != c.vocab:
+            pad = jnp.arange(c.padded_vocab) >= c.vocab
+            lg = jnp.where(pad[None, None], jnp.float32(-1e30), lg)
+        return lg
+
+    # -------------------------------------------------------------- entry
+    def loss(self, params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = C.embed_lookup(params["embed"], tokens)
+        x, _ = self._backbone(params, x)
+        x = C.rms_norm(x, params["ln_f"])
+        return C.softmax_xent(self._logits(params, x), labels,
+                              batch.get("loss_mask"))
+
+    def init_caches(self, B, dtype=None):
+        dtype = dtype or C.COMPUTE_DTYPE
+        zero = self._zero_cache(B, dtype)
+        if self.scan:
+            return jax.tree.map(
+                lambda a: jnp.zeros((self.cfg.n_layers,) + a.shape, a.dtype),
+                zero)
+        return [self._zero_cache(B, dtype) for _ in range(self.cfg.n_layers)]
+
+    def prefill(self, params, batch, max_len: int):
+        tokens = batch["tokens"]
+        x = C.embed_lookup(params["embed"], tokens)
+        x, caches = self._backbone(params, x,
+                                   caches=self.init_caches(tokens.shape[0]))
+        x = C.rms_norm(x, params["ln_f"])
+        logits = self._logits(params, x[:, -1:])
+        return logits, {"layers": caches, "len": jnp.int32(tokens.shape[1])}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens [B,1]. State recurrence — O(1) in context length."""
+        x = C.embed_lookup(params["embed"], tokens)
+        x, caches = self._backbone(params, x, caches=cache["layers"])
+        x = C.rms_norm(x, params["ln_f"])
+        return self._logits(params, x), {"layers": caches,
+                                         "len": cache["len"] + 1}
+
+    # -------------------------------------------------------------- cache
+    def _cache_layer_specs(self, B):
+        c = self.cfg
+        return {"xt": jax.ShapeDtypeStruct((B, c.d_model), C.COMPUTE_DTYPE),
+                "xc": jax.ShapeDtypeStruct((B, c.d_model), C.COMPUTE_DTYPE),
+                "s": jax.ShapeDtypeStruct((B, c.n_heads, c.head_dim,
+                                           c.head_dim), jnp.float32)}
+
+    def cache_specs(self, B, S):
+        # S (context length) does not appear — constant-size state. That IS
+        # the sub-quadratic point for the long_500k cell.
+        layer = self._cache_layer_specs(B)
+        L = self.cfg.n_layers
+        if self.scan:
+            layers = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct((L,) + a.shape, a.dtype), layer)
+        else:
+            layers = [layer for _ in range(L)]
+        return {"layers": layers, "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_axes(self):
+        layer = {"xt": ("batch", None), "xc": ("batch", None),
+                 "s": ("batch", "heads", None, None)}
+        if self.scan:
+            return {"layers": jax.tree.map(lambda ax: ("layer",) + ax, layer,
+                                           is_leaf=lambda t: isinstance(t, tuple)),
+                    "len": ()}
+        return {"layers": [layer for _ in range(self.cfg.n_layers)], "len": ()}
+
+    def param_count(self):
+        return self.cfg.param_count()
+
+    def active_param_count(self):
+        return self.cfg.active_param_count()

@@ -1,0 +1,475 @@
+"""Mamba2 (SSD) layers and the Zamba2 hybrid backbone (arXiv:2411.15242).
+
+Mamba2 state-space duality with scalar-per-head decay a_t ∈ (0,1):
+
+    S_t = a_t · S_{t-1} + dt_t · x_t b_tᵀ          S ∈ R^{H, dh, N}
+    y_t = S_t c_t + D ⊙ x_t
+
+Chunked (SSD) evaluation: scalar decay means the intra-chunk score matrix is
+(C Bᵀ) ⊙ Γ with Γ[t,s] = exp(cla_t − cla_s) for s ≤ t — a plain masked
+matmul, MXU-native. A lax.scan carries S across chunks. All decay exponents
+are non-positive (cla monotone non-increasing differences), so no overflow.
+
+Zamba2: a stack of Mamba2 blocks with ONE shared transformer block
+(GQA attention + MLP, parameters shared) applied every `shared_every`
+layers. The shared attention uses a sliding window so the hybrid runs the
+long_500k cell with a bounded cache (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamSpec
+from repro.sharding.ctx import shard_activation
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int                    # shared-block MLP width (zamba2)
+    vocab: int
+    ssm_state: int = 64          # N
+    head_dim: int = 64           # dh
+    expand: int = 2
+    conv_width: int = 4
+    # zamba2 shared attention block
+    shared_every: int = 6        # 0 = pure mamba
+    n_heads: int = 32
+    n_kv_heads: int = 32
+    attn_window: int = 4096
+    rope_theta: float = 1e4
+    vocab_pad_to: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def dh_attn(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        c, D, Di, N, H = self, self.d_model, self.d_inner, self.ssm_state, self.ssm_heads
+        per = D * (2 * Di + 2 * N + H) + Di * D + 2 * H + Di + 2 * D  # in/out proj, A,D,dt_bias,norms
+        per += c.conv_width * (Di + 2 * N)
+        total = 2 * c.vocab * D + c.n_layers * per
+        if c.shared_every:
+            dh = c.dh_attn
+            total += D * c.n_heads * dh + 2 * D * c.n_kv_heads * dh + c.n_heads * dh * D
+            total += 3 * D * c.d_ff + 4 * D
+        return total
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def _ssd_chunk(xb, b, cmat, la, state0, chunk: int):
+    """Chunked SSD scan.
+
+    xb: [B,S,H,dh] (dt-scaled inputs), b,c: [B,S,N] (single group),
+    la: [B,S,H] per-head log decay (≤ 0), state0: [B,H,dh,N] f32.
+    Returns (y [B,S,H,dh] f32, state).
+    """
+    B, S, H, dh = xb.shape
+    N = b.shape[-1]
+    T = min(chunk, S)
+    n = S // T
+    assert S % T == 0
+    xc = xb.reshape(B, n, T, H, dh).astype(jnp.float32)
+    bc = b.reshape(B, n, T, N).astype(jnp.float32)
+    cc = cmat.reshape(B, n, T, N).astype(jnp.float32)
+    lac = la.reshape(B, n, T, H).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((T, T), jnp.float32))          # inclusive diag
+
+    def body(S0, inp):
+        xc, bc, cc, lac = inp                              # [B,T,...]
+        cla = jnp.cumsum(lac, axis=1)                      # [B,T,H] inclusive
+        cla_L = cla[:, -1:, :]
+        # scores G[t,s] = (c_t·b_s) exp(cla_t - cla_s), s<=t
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)        # [B,T,T]
+        gamma = jnp.exp(jnp.minimum(cla[:, :, None, :] - cla[:, None, :, :], 0.0))
+        A = scores[:, :, :, None] * gamma * tri[None, :, :, None]   # [B,T,T,H]
+        y = jnp.einsum("btsh,bshd->bthd", A, xc)
+        # cross-chunk: y += (c_t ⊙ e^{cla_t}) · S0
+        c_tld = cc[:, :, None, :] * jnp.exp(cla)[..., None]          # [B,T,H,N]
+        y = y + jnp.einsum("bthn,bhdn->bthd", c_tld, S0)
+        # state: S1 = e^{cla_L} S0 + Σ_s e^{cla_L - cla_s} x_s b_sᵀ
+        w = jnp.exp(cla_L - cla)                                     # [B,T,H] ≤1
+        S1 = jnp.exp(cla_L)[:, 0, :, None, None] * S0 + jnp.einsum(
+            "bthd,bth,btn->bhdn", xc, w, bc)
+        return S1, y
+
+    inp = (xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3),
+           cc.transpose(1, 0, 2, 3), lac.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), inp)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh), state
+
+
+def _causal_conv(x, w, cache):
+    """Depthwise causal conv. x [B,S,Ch], w [K,Ch], cache [B,K-1,Ch] or None.
+    Returns (y [B,S,Ch], new_cache [B,K-1,Ch])."""
+    K = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None].astype(x.dtype)
+            for i in range(K))
+    return y, xp[:, -(K - 1):, :] if K > 1 else cache
+
+
+class Zamba2LM:
+    """Mamba2 stack + shared attention block; pure Mamba2 if shared_every=0."""
+
+    def __init__(self, cfg: Mamba2Config, chunk: int = 64, q_chunk: int = 2048,
+                 scan_layers: bool = False, remat: bool = False):
+        self.cfg = cfg
+        self.chunk = chunk
+        self.q_chunk = q_chunk
+        self.remat = remat
+        # scan groups of `shared_every` mamba layers (+1 shared block each);
+        # requires n_layers % shared_every == 0 (54 = 9x6 for zamba2-2.7b)
+        ok = (cfg.shared_every and cfg.n_layers % cfg.shared_every == 0) \
+            or not cfg.shared_every
+        self.scan = scan_layers and ok
+
+    @property
+    def group_size(self) -> int:
+        return self.cfg.shared_every or min(8, self.cfg.n_layers)
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // self.group_size
+
+    # ------------------------------------------------------------- params
+    def param_specs(self):
+        c, D, Di, N = self.cfg, self.cfg.d_model, self.cfg.d_inner, self.cfg.ssm_state
+        H = c.ssm_heads
+        one = {
+            "ln": ParamSpec((D,), ("embed",), init="ones"),
+            "in_proj": ParamSpec((D, 2 * Di + 2 * N + H), ("embed", "ssm_inner")),
+            "conv_w": ParamSpec((c.conv_width, Di + 2 * N), ("conv", "ssm_inner"), scale=0.5),
+            "a_log": ParamSpec((H,), (None,), init="zeros"),
+            "d_skip": ParamSpec((H,), (None,), init="ones"),
+            "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+            "norm_g": ParamSpec((Di,), ("ssm_inner",), init="ones"),
+            "out_proj": ParamSpec((Di, D), ("ssm_inner", "embed")),
+        }
+        if self.scan:
+            from .transformer import _stack_specs
+            layers = _stack_specs(one, c.n_layers)
+        else:
+            layers = [dict(one) for _ in range(c.n_layers)]
+        tree = {
+            "embed": ParamSpec((c.padded_vocab, D), ("vocab", "embed")),
+            "layers": layers,
+            "ln_f": ParamSpec((D,), ("embed",), init="ones"),
+            "lm_head": ParamSpec((D, c.padded_vocab), ("embed", "vocab")),
+        }
+        if c.shared_every:
+            dh = c.dh_attn
+            tree["shared"] = {
+                "ln1": ParamSpec((D,), ("embed",), init="ones"),
+                "ln2": ParamSpec((D,), ("embed",), init="ones"),
+                "attn": {
+                    "wq": ParamSpec((D, c.n_heads, dh), ("embed", "heads", "head_dim")),
+                    "wk": ParamSpec((D, c.n_kv_heads, dh), ("embed", "kv_heads", "head_dim")),
+                    "wv": ParamSpec((D, c.n_kv_heads, dh), ("embed", "kv_heads", "head_dim")),
+                    "wo": ParamSpec((c.n_heads, dh, D), ("heads", "head_dim", "embed")),
+                },
+                "mlp": C.swiglu_param_specs(D, c.d_ff),
+            }
+        return tree
+
+    # -------------------------------------------------------- mamba block
+    def _mamba(self, lp, x, conv_cache, state0):
+        c = self.cfg
+        B, S, D = x.shape
+        Di, N, H, dh = c.d_inner, c.ssm_state, c.ssm_heads, c.head_dim
+        zxbcdt = jnp.einsum("bsd,de->bse", x, lp["in_proj"].astype(x.dtype),
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+        z, xin, b, cm, dt = jnp.split(
+            zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+        xbc = jnp.concatenate([xin, b, cm], axis=-1)
+        xbc, new_conv = _causal_conv(xbc, lp["conv_w"], conv_cache)
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+        xin, b, cm = jnp.split(xbc, [Di, Di + N], axis=-1)
+
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + lp["dt_bias"][None, None].astype(jnp.float32))
+        dt = jnp.clip(dt, 1e-4, 8.0)                       # [B,S,H]
+        la = -jnp.exp(lp["a_log"].astype(jnp.float32))[None, None] * dt  # ≤0
+        xh = xin.reshape(B, S, H, dh)
+        xb = xh.astype(jnp.float32) * dt[..., None]
+        y, state1 = _ssd_chunk(xb, b, cm, la, state0, self.chunk)
+        y = y + lp["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, Di).astype(x.dtype)
+        y = C.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                       lp["norm_g"])
+        out = jnp.einsum("bse,ed->bsd", y, lp["out_proj"].astype(x.dtype))
+        return out, new_conv, state1
+
+    # ------------------------------------------------- shared attn block
+    def _shared_block(self, sp, x, positions, cache, cache_len):
+        """Sliding-window GQA with a ring-buffer cache of A=min(S,window)
+        slots, so the long_500k decode cell carries a bounded cache.
+
+        Modes: train (cache None), prefill (S>1 — full windowed attention,
+        then the LAST A tokens are written to the cache), decode (S==1 —
+        ring write + inline attention over real key positions)."""
+        c = self.cfg
+        B, S, D = x.shape
+        dh = c.dh_attn
+        h = C.rms_norm(x, sp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", h, sp["attn"]["wq"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        k = jnp.einsum("bsd,dhk->bshk", h, sp["attn"]["wk"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", h, sp["attn"]["wv"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        cos, sin = C.rope_tables(positions, dh, c.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        q, k = C.apply_rope(q, cos, sin), C.apply_rope(k, cos, sin)
+        if cache is None:                                   # train
+            o = C.dense_attention(q, k, v, causal=True, q_chunk=self.q_chunk,
+                                  window=c.attn_window)
+            new_cache = None
+        elif S > 1:                                          # prefill
+            o = C.dense_attention(q, k, v, causal=True, q_chunk=self.q_chunk,
+                                  window=c.attn_window)
+            A = cache["k"].shape[1]
+            if S >= A:                                       # keep the tail
+                new_cache = {"k": k[:, S - A:], "v": v[:, S - A:]}
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+                new_cache = {"k": ck, "v": cv}
+        else:                                                # decode, S == 1
+            A = cache["k"].shape[1]
+            start = cache_len                                # real position
+            in_ring = start >= A
+            shifted_k = jnp.roll(cache["k"], -1, axis=1)
+            shifted_v = jnp.roll(cache["v"], -1, axis=1)
+            ck = jnp.where(in_ring,
+                           jax.lax.dynamic_update_slice_in_dim(shifted_k, k, A - 1, axis=1),
+                           jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                               jnp.minimum(start, A - 1), axis=1))
+            cv = jnp.where(in_ring,
+                           jax.lax.dynamic_update_slice_in_dim(shifted_v, v, A - 1, axis=1),
+                           jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                               jnp.minimum(start, A - 1), axis=1))
+            new_cache = {"k": ck, "v": cv}
+            slot = jnp.arange(A)
+            kpos = jnp.where(in_ring, start - A + 1 + slot, slot)  # real pos
+            win = c.attn_window or 10**9
+            invalid = (kpos > start) | (kpos <= start - win)
+            s = C._gqa_scores(q, ck) * (1.0 / math.sqrt(dh))
+            s = jnp.where(invalid[None, None, None, :], jnp.float32(-1e30), s)
+            p = jax.nn.softmax(s, axis=-1)
+            o = C._gqa_out(p, cv).astype(x.dtype)
+        a = jnp.einsum("bshk,hkd->bsd", o, sp["attn"]["wo"].astype(x.dtype))
+        x = x + a
+        m = C.swiglu(C.rms_norm(x, sp["ln2"]), sp["mlp"]["wi_gate"],
+                     sp["mlp"]["wi_up"], sp["mlp"]["wo"])
+        return x + m, new_cache
+
+    # ------------------------------------------------------------ forward
+    def _shared_points(self):
+        c = self.cfg
+        if not c.shared_every:
+            return []
+        return [i for i in range(c.n_layers) if i % c.shared_every == c.shared_every - 1]
+
+    def _mamba_layer(self, lp, x, mcache):
+        """One mamba block with residual + boundary constraint."""
+        B = x.shape[0]
+        c = self.cfg
+        if mcache is None:
+            cc = None
+            s0 = jnp.zeros((B, c.ssm_heads, c.head_dim, c.ssm_state),
+                           jnp.float32)
+        else:
+            cc, s0 = mcache["conv"], mcache["s"]
+        h, nc, s1 = self._mamba(lp, C.rms_norm(x, lp["ln"]), cc, s0)
+        x = x + h
+        x = shard_activation(x, ("batch", "seq_save", None))
+        return x, {"conv": nc, "s": s1}
+
+    def _backbone(self, params, x, positions, caches=None, cache_len=None):
+        c = self.cfg
+        B = x.shape[0]
+        if not self.scan:
+            pts = set(self._shared_points())
+            new_caches = {"mamba": [], "attn": []}
+            ai = 0
+            for i, lp in enumerate(params["layers"]):
+                mc = None if caches is None else caches["mamba"][i]
+                x, nc = self._mamba_layer(lp, x, mc)
+                new_caches["mamba"].append(nc)
+                if i in pts:
+                    ac = None if caches is None else caches["attn"][ai]
+                    x, nac = self._shared_block(params["shared"], x, positions,
+                                                ac, cache_len)
+                    new_caches["attn"].append(nac)
+                    ai += 1
+            return x, new_caches
+
+        # ---- scan mode: G groups of E mamba layers (+ shared block each)
+        E, G = self.group_size, self.n_groups
+        params_g = jax.tree.map(
+            lambda a: a.reshape((G, E) + a.shape[1:]), params["layers"])
+        has_shared = bool(c.shared_every)
+
+        if caches is None:
+            def one(x, lp):
+                x, _ = self._mamba_layer(lp, x, None)
+                return x, None
+            inner = jax.checkpoint(one) if self.remat else one
+
+            def group(x, lp_g):
+                x, _ = jax.lax.scan(inner, x, lp_g)
+                if has_shared:
+                    x, _ = self._shared_block(params["shared"], x, positions,
+                                              None, None)
+                return x, None
+
+            fn = jax.checkpoint(group) if self.remat else group
+            x, _ = jax.lax.scan(fn, x, params_g)
+            return x, None
+
+        mcaches_g = jax.tree.map(
+            lambda a: a.reshape((G, E) + a.shape[1:]), caches["mamba"])
+
+        def one_c(x, sl):
+            lp, mc = sl
+            return self._mamba_layer(lp, x, mc)
+
+        def group_c(x, sl):
+            lp_g, mc_g, ac = sl
+            x, nmc = jax.lax.scan(one_c, x, (lp_g, mc_g))
+            nac = ac
+            if has_shared:
+                x, nac = self._shared_block(params["shared"], x, positions,
+                                            ac, cache_len)
+            return x, (nmc, nac)
+
+        x, (new_m_g, new_a) = jax.lax.scan(group_c, x,
+                                           (params_g, mcaches_g,
+                                            caches["attn"]))
+        new_m = jax.tree.map(lambda a: a.reshape((G * E,) + a.shape[2:]),
+                             new_m_g)
+        return x, {"mamba": new_m, "attn": new_a}
+
+    def _logits(self, params, x):
+        lg = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        from repro.sharding.ctx import shard_activation
+        lg = shard_activation(lg, ("batch", "seq", "vocab"))
+        c = self.cfg
+        if c.padded_vocab != c.vocab:
+            pad = jnp.arange(c.padded_vocab) >= c.vocab
+            lg = jnp.where(pad[None, None], jnp.float32(-1e30), lg)
+        return lg
+
+    # -------------------------------------------------------------- entry
+    def loss(self, params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = C.embed_lookup(params["embed"], tokens)
+        x, _ = self._backbone(params, x, pos)
+        x = C.rms_norm(x, params["ln_f"])
+        return C.softmax_xent(self._logits(params, x), labels,
+                              batch.get("loss_mask"))
+
+    def prefill(self, params, batch, max_len: int):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        caches = self._empty_caches(B, max_len)
+        x = C.embed_lookup(params["embed"], tokens)
+        x, caches = self._backbone(params, x, pos, caches=caches,
+                                   cache_len=jnp.int32(0))
+        x = C.rms_norm(x, params["ln_f"])
+        return self._logits(params, x[:, -1:]), {"layers": caches,
+                                                 "len": jnp.int32(S)}
+
+    def decode_step(self, params, cache, tokens):
+        B = tokens.shape[0]
+        ln = cache["len"]
+        pos = jnp.broadcast_to(ln[None, None], (B, 1))
+        x = C.embed_lookup(params["embed"], tokens)
+        x, caches = self._backbone(params, x, pos, caches=cache["layers"],
+                                   cache_len=ln)
+        x = C.rms_norm(x, params["ln_f"])
+        return self._logits(params, x), {"layers": caches, "len": ln + 1}
+
+    # -------------------------------------------------------------- cache
+    def _attn_cache_len(self, S):
+        c = self.cfg
+        return min(S, c.attn_window) if c.attn_window else S
+
+    def _empty_caches(self, B, S):
+        c = self.cfg
+        one_m = {"conv": jnp.zeros((B, c.conv_width - 1,
+                                    c.d_inner + 2 * c.ssm_state),
+                                   C.COMPUTE_DTYPE),
+                 "s": jnp.zeros((B, c.ssm_heads, c.head_dim, c.ssm_state),
+                                jnp.float32)}
+        A = self._attn_cache_len(S)
+        dh = c.dh_attn
+        one_a = {"k": jnp.zeros((B, A, c.n_kv_heads, dh), C.COMPUTE_DTYPE),
+                 "v": jnp.zeros((B, A, c.n_kv_heads, dh), C.COMPUTE_DTYPE)}
+        if self.scan:
+            mam = jax.tree.map(
+                lambda a: jnp.zeros((c.n_layers,) + a.shape, a.dtype), one_m)
+            attn = jax.tree.map(
+                lambda a: jnp.zeros((self.n_groups,) + a.shape, a.dtype),
+                one_a) if c.shared_every else jnp.zeros((self.n_groups, 0))
+            return {"mamba": mam, "attn": attn}
+        mam = [jax.tree.map(jnp.copy, one_m) for _ in range(c.n_layers)]
+        attn = [jax.tree.map(jnp.copy, one_a) for _ in self._shared_points()]
+        return {"mamba": mam, "attn": attn}
+
+    def cache_specs(self, B, S):
+        layers = jax.eval_shape(lambda: self._empty_caches(B, S))
+        return {"layers": layers, "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_axes(self):
+        c = self.cfg
+        one_m = {"conv": ("batch", None, "ssm_inner"),
+                 "s": ("batch", "heads", None, None)}
+        one_a = {"k": ("batch", "seq_kv", "kv_heads", "kv_cache_head_dim"),
+                 "v": ("batch", "seq_kv", "kv_heads", "kv_cache_head_dim")}
+        if self.scan:
+            add = lambda ax: ("layer",) + ax
+            mam = jax.tree.map(add, one_m, is_leaf=lambda t_: isinstance(t_, tuple))
+            attn = (jax.tree.map(add, one_a,
+                                 is_leaf=lambda t_: isinstance(t_, tuple))
+                    if c.shared_every else ("layer", None))
+            return {"layers": {"mamba": mam, "attn": attn}, "len": ()}
+        mam = [dict(one_m) for _ in range(c.n_layers)]
+        attn = [dict(one_a) for _ in self._shared_points()]
+        return {"layers": {"mamba": mam, "attn": attn}, "len": ()}
+
+    def param_count(self):
+        return self.cfg.param_count()
+
+    def active_param_count(self):
+        return self.cfg.active_param_count()

@@ -1,0 +1,488 @@
+"""Decoder-only transformer LM covering the dense/GQA/MLA/MoE assigned archs
+(deepseek-67b/7b, llama3.2-1b, qwen3-14b, llama4-scout, deepseek-v2-lite, and
+the text backbone of internvl2).
+
+Layers are unrolled (see models/common.py docstring). All three entry points
+— ``loss`` (train), ``prefill`` and ``decode_step`` (serve) — share the same
+parameter tree.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamSpec
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 5e5
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0
+    # MLA
+    mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # attention masking
+    sliding_window: int = 0           # 0 = full causal
+    vocab_pad_to: int = 1             # pad vocab to a multiple (TP divisibility)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab + m - 1) // m) * m
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and i >= self.first_k_dense
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND roofline accounting)."""
+        c, D, dh = self, self.d_model, self.dh
+        n = c.vocab * D * 2                      # embed + head
+        for i in range(c.n_layers):
+            n += 2 * D                           # norms
+            if c.mla:
+                n += D * c.n_heads * (c.qk_nope_dim + c.qk_rope_dim)
+                n += D * (c.kv_lora_rank + c.qk_rope_dim) + c.kv_lora_rank
+                n += c.kv_lora_rank * c.n_heads * (c.qk_nope_dim + c.v_head_dim)
+                n += c.n_heads * c.v_head_dim * D
+            else:
+                n += D * c.n_heads * dh + 2 * D * c.n_kv_heads * dh + c.n_heads * dh * D
+            if c.is_moe_layer(i):
+                n += D * c.n_experts + 3 * c.n_experts * D * c.moe_d_ff
+                n += 3 * D * c.moe_d_ff * c.n_shared_experts
+            else:
+                n += 3 * D * c.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared experts only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        c, D = self, self.d_model
+        n = self.param_count()
+        for i in range(c.n_layers):
+            if c.is_moe_layer(i):
+                n -= 3 * (c.n_experts - c.top_k) * D * c.moe_d_ff
+        return n
+
+
+def _stack_specs(spec_tree, L: int):
+    """Prepend a ('layer', L) axis to every ParamSpec leaf (scan mode)."""
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((L,) + tuple(s.shape), ("layer",) + tuple(s.axes),
+                         dtype=s.dtype, init=s.init, scale=s.scale)
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class TransformerLM:
+    """``scan_layers=True`` stacks the homogeneous layer block on a leading
+    'layer' axis and applies it with ``lax.scan`` — compile time is ~constant
+    in depth (the MaxText production pattern; a 95-layer unrolled graph takes
+    XLA tens of minutes on one core). MoE models unroll the ``first_k_dense``
+    prefix and scan the homogeneous MoE segment. The dry-run corrects
+    scan-body-counted-once cost analysis by depth extrapolation
+    (launch/dryrun.py)."""
+
+    def __init__(self, cfg: TransformerConfig, tp_divisor: int = 1,
+                 q_chunk: int = 4096, remat: bool = False,
+                 scan_layers: bool = False):
+        self.cfg = cfg
+        self.tp = tp_divisor
+        self.q_chunk = q_chunk
+        self.remat = remat                                  # per-layer rematerialization
+        self.scan = scan_layers
+        self.H = C.pad_heads(cfg.n_heads, tp_divisor)      # padded q/o heads
+        self.Hkv = cfg.n_kv_heads                           # never padded
+
+    @property
+    def n_prefix(self) -> int:
+        return self.cfg.first_k_dense if self.cfg.n_experts else 0
+
+    @property
+    def n_scan(self) -> int:
+        return self.cfg.n_layers - self.n_prefix
+
+    # ------------------------------------------------------------- params
+    def _layer_specs_one(self, moe: bool):
+        c, D, dh, H = self.cfg, self.cfg.d_model, self.cfg.dh, self.H
+        p = {
+            "ln1": ParamSpec((D,), ("embed",), init="ones"),
+            "ln2": ParamSpec((D,), ("embed",), init="ones"),
+        }
+        if c.mla:
+            p["attn"] = {
+                "wq": ParamSpec((D, H, c.qk_nope_dim + c.qk_rope_dim),
+                                ("embed", "heads", "head_dim")),
+                "wkv_a": ParamSpec((D, c.kv_lora_rank + c.qk_rope_dim),
+                                   ("embed", "kv_lora")),
+                "kv_norm": ParamSpec((c.kv_lora_rank,), ("kv_lora",), init="ones"),
+                "wk_b": ParamSpec((c.kv_lora_rank, H, c.qk_nope_dim),
+                                  ("kv_lora", "heads", "head_dim")),
+                "wv_b": ParamSpec((c.kv_lora_rank, H, c.v_head_dim),
+                                  ("kv_lora", "heads", "head_dim")),
+                "wo": ParamSpec((H, c.v_head_dim, D),
+                                ("heads", "head_dim", "embed")),
+            }
+        else:
+            p["attn"] = {
+                "wq": ParamSpec((D, H, dh), ("embed", "heads", "head_dim")),
+                "wk": ParamSpec((D, self.Hkv, dh), ("embed", "kv_heads", "head_dim")),
+                "wv": ParamSpec((D, self.Hkv, dh), ("embed", "kv_heads", "head_dim")),
+                "wo": ParamSpec((H, dh, D), ("heads", "head_dim", "embed")),
+            }
+            if c.qk_norm:
+                p["attn"]["q_norm"] = ParamSpec((dh,), ("head_dim",), init="ones")
+                p["attn"]["k_norm"] = ParamSpec((dh,), ("head_dim",), init="ones")
+        if moe:
+            p["moe"] = C.moe_param_specs(D, c.moe_d_ff, c.n_experts)
+            if c.n_shared_experts:
+                p["shared_mlp"] = C.swiglu_param_specs(
+                    D, c.moe_d_ff * c.n_shared_experts)
+        else:
+            p["mlp"] = C.swiglu_param_specs(D, c.d_ff)
+        return p
+
+    def param_specs(self):
+        c = self.cfg
+        V = c.padded_vocab
+        out = {
+            "embed": ParamSpec((V, c.d_model), ("vocab", "embed"), scale=1.0),
+            "ln_f": ParamSpec((c.d_model,), ("embed",), init="ones"),
+            "lm_head": ParamSpec((c.d_model, V), ("embed", "vocab")),
+        }
+        if self.scan:
+            out["prefix_layers"] = [self._layer_specs_one(False)
+                                    for _ in range(self.n_prefix)]
+            out["layers"] = _stack_specs(
+                self._layer_specs_one(c.n_experts > 0), self.n_scan)
+        else:
+            out["layers"] = [self._layer_specs_one(c.is_moe_layer(i))
+                             for i in range(c.n_layers)]
+        return out
+
+    # ------------------------------------------------------------ forward
+    def _attn(self, p, x, *, positions, cache=None, cache_len=None):
+        """x [B,S,D] -> [B,S,D]; if cache given (decode/prefill-write) the
+        (k,v) for these positions are written at ``positions``."""
+        c, dh = self.cfg, self.cfg.dh
+        B, S, D = x.shape
+        if c.mla:
+            return self._attn_mla(p, x, positions=positions, cache=cache,
+                                  cache_len=cache_len)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if c.qk_norm:
+            q = C.rms_norm(q, p["q_norm"])
+            k = C.rms_norm(k, p["k_norm"])
+        cos, sin = C.rope_tables(positions, dh, c.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+
+        window = c.sliding_window or None
+        if cache is None:
+            o = C.dense_attention(q, k, v, causal=True, q_chunk=self.q_chunk,
+                                  window=window)
+        else:
+            start = cache_len if cache_len is not None else 0
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, start, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, start, axis=1)
+            cache = {"k": ck, "v": cv}
+            o = C.dense_attention(q, ck, cv, causal=True, q_chunk=self.q_chunk,
+                                  q_offset=start, window=window,
+                                  kv_valid_len=start + S)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        return y, cache
+
+    def _attn_mla(self, p, x, *, positions, cache=None, cache_len=None):
+        """Multi-head latent attention. Train/prefill: materialized K/V.
+        Decode: absorbed form over the compressed cache (the MLA point)."""
+        c = self.cfg
+        B, S, D = x.shape
+        r, nd, rd, vd = c.kv_lora_rank, c.qk_nope_dim, c.qk_rope_dim, c.v_head_dim
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        q_nope, q_rope = q[..., :nd], q[..., nd:]
+        kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype),
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+        ckv, k_rope = kv_a[..., :r], kv_a[..., r:]
+        ckv = C.rms_norm(ckv, p["kv_norm"])
+        cos, sin = C.rope_tables(positions, rd, c.rope_theta)
+        q_rope = C.apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+        k_rope = C.apply_rope(k_rope[:, :, None, :], cos[:, :, None, :],
+                              sin[:, :, None, :])[:, :, 0, :]
+        scale = 1.0 / math.sqrt(nd + rd)
+
+        if cache is None:
+            k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"].astype(x.dtype),
+                                preferred_element_type=jnp.float32).astype(x.dtype)
+            v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"].astype(x.dtype),
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            kk = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, S, self.H, rd))], axis=-1)
+            qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+            o = C.dense_attention(qq * math.sqrt((nd + rd) / qq.shape[-1]),
+                                  kk, v, causal=True, q_chunk=self.q_chunk)
+            y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+            return y, None
+
+        # decode/prefill-write: cache compressed latents only
+        start = cache_len
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, start, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope, start, axis=1)
+        cache = {"ckv": cc, "krope": cr}
+        # absorbed scores: q_nope -> latent space once per step
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(x.dtype),
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, cc, preferred_element_type=jnp.float32)
+             + jnp.einsum("bshk,btk->bhst", q_rope, cr,
+                          preferred_element_type=jnp.float32)) * scale
+        kpos = jnp.arange(cc.shape[1])
+        qpos = start + jnp.arange(S)                 # causal per q position
+        s = jnp.where((kpos[None, :] > qpos[:, None])[None, None],
+                      jnp.float32(-1e30), s)
+        pattn = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", pattn.astype(x.dtype), cc,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        o = jnp.einsum("bshr,rhk->bshk", ctx, p["wv_b"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        return y, cache
+
+    def _mlp(self, lp, moe: bool, x):
+        c = self.cfg
+        if moe:
+            y = C.moe_block(x, lp["moe"], n_experts=c.n_experts, top_k=c.top_k)
+            if c.n_shared_experts:
+                y = y + C.swiglu(x, lp["shared_mlp"]["wi_gate"],
+                                 lp["shared_mlp"]["wi_up"], lp["shared_mlp"]["wo"])
+            return y
+        return C.swiglu(x, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"], lp["mlp"]["wo"])
+
+    def _layer_apply(self, lp, x, moe: bool, *, positions, cache, cache_len,
+                     sp_boundary: bool = True):
+        """One transformer block -> (x, new_cache).
+
+        Megatron-SP discipline: remat-SAVED values are sequence-sharded.
+        ``sp_boundary=False`` (scan-mode inner layers, §Perf A5) skips the
+        per-layer reshard — only GROUP carries are saved, so only group
+        boundaries pay the gather/scatter."""
+        from repro.sharding.ctx import shard_activation
+        if sp_boundary:
+            x = shard_activation(x, ("batch", "seq", None))  # bf16 gather
+        h, nc = self._attn(lp["attn"], C.rms_norm(x, lp["ln1"]),
+                           positions=positions, cache=cache,
+                           cache_len=cache_len)
+        x = x + h
+        x = x + self._mlp(lp, moe, C.rms_norm(x, lp["ln2"]))
+        if sp_boundary:
+            x = shard_activation(x, ("batch", "seq_save", None))
+        return x, nc
+
+    def _backbone(self, params, x, *, positions, caches=None, cache_len=None):
+        c = self.cfg
+        if not self.scan:
+            new_caches = []
+            for i, lp in enumerate(params["layers"]):
+                moe = c.is_moe_layer(i)
+                if caches is None and self.remat:
+                    def f(lp, x, moe=moe):
+                        return self._layer_apply(lp, x, moe,
+                                                 positions=positions,
+                                                 cache=None, cache_len=None)[0]
+                    x = jax.checkpoint(f)(lp, x)
+                    new_caches.append(None)
+                else:
+                    x, nc = self._layer_apply(
+                        lp, x, moe, positions=positions,
+                        cache=None if caches is None else caches[i],
+                        cache_len=cache_len)
+                    new_caches.append(nc)
+            return x, new_caches
+
+        # ---- scan mode: unrolled dense prefix + scanned homogeneous stack
+        new_prefix = []
+        for i, lp in enumerate(params["prefix_layers"]):
+            cache_i = None if caches is None else caches["prefix"][i]
+            if caches is None and self.remat:
+                def f(lp, x):
+                    return self._layer_apply(lp, x, False,
+                                             positions=positions,
+                                             cache=None, cache_len=None)[0]
+                x = jax.checkpoint(f)(lp, x)
+                new_prefix.append(None)
+            else:
+                x, nc = self._layer_apply(lp, x, False, positions=positions,
+                                          cache=cache_i, cache_len=cache_len)
+                new_prefix.append(nc)
+
+        moe = c.n_experts > 0
+
+        if caches is None:
+            # ---- train: grouped-remat scan. jax.checkpoint at the GROUP
+            # level divides the saved-carry stash by the group size g (the
+            # recompute re-runs g layers). g = largest divisor of n_scan ≤ 8.
+            L = self.n_scan
+            g = max(d for d in range(1, min(8, L) + 1) if L % d == 0)
+            params_g = jax.tree.map(
+                lambda a: a.reshape((L // g, g) + a.shape[1:]),
+                params["layers"])
+
+            def one_layer(x, lp):
+                x, _ = self._layer_apply(lp, x, moe, positions=positions,
+                                         cache=None, cache_len=None)
+                return x, None
+
+            # double remat: per-layer checkpoint bounds the inner scan's
+            # saved residuals to one carry per layer; the group checkpoint
+            # divides the OUTER carry stash by g. Backward recompute ~2x fwd.
+            # (§Perf A5 — group-granular SP boundaries — was REFUTED: GSPMD
+            # then carries full-sequence activations across the inner scan,
+            # +26% collectives and 3.7x the modeled peak. Reverted.)
+            inner = jax.checkpoint(one_layer) if self.remat else one_layer
+
+            def group(x, lp_g):
+                x, _ = jax.lax.scan(inner, x, lp_g)
+                return x, None
+
+            fn = jax.checkpoint(group) if self.remat else group
+            x, _ = jax.lax.scan(fn, x, params_g)
+            return x, {"prefix": new_prefix, "stack": None}
+
+        # ---- serve: plain scan threading the stacked cache
+        def body(x, sl):
+            lp, cache_l = sl
+            x, nc = self._layer_apply(lp, x, moe, positions=positions,
+                                      cache=cache_l, cache_len=cache_len)
+            return x, nc
+
+        x, new_stack = jax.lax.scan(body, x, (params["layers"],
+                                              caches["stack"]))
+        return x, {"prefix": new_prefix, "stack": new_stack}
+
+    def _embed(self, params, tokens):
+        # cast BEFORE the gather: the transpose (scatter-add of the embedding
+        # gradient) then runs on a bf16 table — half the buffer and half the
+        # cross-device all-reduce bytes of an f32 table-grad.
+        return C.embed_lookup(params["embed"], tokens)
+
+    def _logits(self, params, x):
+        lg = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        from repro.sharding.ctx import shard_activation
+        lg = shard_activation(lg, ("batch", "seq", "vocab"))
+        c = self.cfg
+        if c.padded_vocab != c.vocab:
+            pad = jnp.arange(c.padded_vocab) >= c.vocab
+            lg = jnp.where(pad[None, None], jnp.float32(-1e30), lg)
+        return lg
+
+    # -------------------------------------------------------------- entry
+    def loss(self, params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self._embed(params, tokens)
+        x, _ = self._backbone(params, x, positions=pos)
+        x = C.rms_norm(x, params["ln_f"])
+        return C.softmax_xent(self._logits(params, x), labels,
+                              batch.get("loss_mask"))
+
+    def prefill(self, params, batch, max_len: int):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        caches = self.empty_caches(B, max_len)
+        x = self._embed(params, tokens)
+        x, caches = self._backbone(params, x, positions=pos, caches=caches,
+                                   cache_len=jnp.int32(0))
+        x = C.rms_norm(x, params["ln_f"])
+        logits = self._logits(params, x[:, -1:])
+        return logits, {"layers": caches, "len": jnp.int32(S)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens [B,1] -> (logits [B,1,V], cache)."""
+        B = tokens.shape[0]
+        ln = cache["len"]
+        pos = jnp.broadcast_to(ln[None, None], (B, 1))
+        x = self._embed(params, tokens)
+        x, caches = self._backbone(params, x, positions=pos,
+                                   caches=cache["layers"], cache_len=ln)
+        x = C.rms_norm(x, params["ln_f"])
+        return self._logits(params, x), {"layers": caches, "len": ln + 1}
+
+    # -------------------------------------------------------------- cache
+    def _empty_cache_layer(self, B, S):
+        c = self.cfg
+        if c.mla:
+            return {"ckv": jnp.zeros((B, S, c.kv_lora_rank), C.COMPUTE_DTYPE),
+                    "krope": jnp.zeros((B, S, c.qk_rope_dim), C.COMPUTE_DTYPE)}
+        return {"k": jnp.zeros((B, S, self.Hkv, c.dh), C.COMPUTE_DTYPE),
+                "v": jnp.zeros((B, S, self.Hkv, c.dh), C.COMPUTE_DTYPE)}
+
+    def empty_caches(self, B, S):
+        """Cache container matching the backbone mode (list vs prefix+stack)."""
+        if not self.scan:
+            return [self._empty_cache_layer(B, S)
+                    for _ in range(self.cfg.n_layers)]
+        one = self._empty_cache_layer(B, S)
+        stack = jax.tree.map(
+            lambda a: jnp.zeros((self.n_scan,) + a.shape, a.dtype), one)
+        return {"prefix": [self._empty_cache_layer(B, S)
+                           for _ in range(self.n_prefix)],
+                "stack": stack}
+
+    def cache_specs(self, B, S):
+        layers = jax.eval_shape(lambda: self.empty_caches(B, S))
+        return {"layers": layers,
+                "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_axes(self):
+        c = self.cfg
+        if c.mla:
+            layer = {"ckv": ("batch", "seq_kv", "kv_cache_lora"),
+                     "krope": ("batch", "seq_kv", None)}
+        else:
+            layer = {"k": ("batch", "seq_kv", "kv_heads", "kv_cache_head_dim"),
+                     "v": ("batch", "seq_kv", "kv_heads", "kv_cache_head_dim")}
+        if not self.scan:
+            return {"layers": [layer for _ in range(c.n_layers)], "len": ()}
+        stacked = jax.tree.map(lambda ax: ("layer",) + ax, layer,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return {"layers": {"prefix": [layer for _ in range(self.n_prefix)],
+                           "stack": stacked},
+                "len": ()}
+
+    # ----------------------------------------------------------- counting
+    def param_count(self):
+        return self.cfg.param_count()
+
+    def active_param_count(self):
+        return self.cfg.active_param_count()

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_step, global_norm
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .compress import compress_grads, decompress_grads, CompressionConfig

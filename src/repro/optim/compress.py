@@ -1,0 +1,65 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+The data-parallel gradient all-reduce crosses the lowest-bandwidth axis
+('pod' = DCN/optical). Two distributed-optimization tricks:
+
+- **bf16 compression**: cast grads to bf16 *before* the psum and back after
+  — halves cross-pod collective bytes. Exact for the exponent range of LM
+  grads; the Adam update stays f32.
+- **int8 + error feedback**: per-leaf max-abs scale, int8 quantize, carry
+  the quantization residual into the next step (EF-SGD style), 4x fewer
+  bytes. Used when the pod axis is the bottleneck (see EXPERIMENTS.md §Perf).
+
+These run *inside* the jitted train step; GSPMD emits the narrower
+all-reduce automatically because the values being reduced are bf16/int8.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "none"            # 'none' | 'bf16' | 'int8_ef'
+
+
+def compress_grads(cfg: CompressionConfig, grads, error_state=None):
+    """Returns (wire_grads, aux) where wire_grads is what crosses the
+    network. aux carries scales / residual inputs for decompress."""
+    if cfg.mode == "none":
+        return grads, None
+    if cfg.mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), None
+    if cfg.mode == "int8_ef":
+        if error_state is None:
+            error_state = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                       grads)
+        def q(g, e):
+            gf = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            resid = gf - qi.astype(jnp.float32) * scale
+            return qi, scale, resid
+        triples = jax.tree.map(q, grads, error_state)
+        wire = jax.tree.map(lambda t: t[0], triples,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        scales = jax.tree.map(lambda t: t[1], triples,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        resid = jax.tree.map(lambda t: t[2], triples,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return wire, {"scales": scales, "residual": resid}
+    raise ValueError(f"unknown compression mode {cfg.mode!r}")
+
+
+def decompress_grads(cfg: CompressionConfig, wire, aux):
+    if cfg.mode == "none":
+        return wire
+    if cfg.mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), wire)
+    if cfg.mode == "int8_ef":
+        return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                            wire, aux["scales"])
+    raise ValueError(cfg.mode)

@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps: int, min_ratio: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+    return min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    w = jnp.clip(s / max(1, warmup), 0.0, 1.0)
+    return w * cosine_schedule(jnp.maximum(s - warmup, 0.0),
+                               max(1, total_steps - warmup), min_ratio)

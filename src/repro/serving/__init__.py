@@ -1,0 +1,2 @@
+from .prefix_cache import TieredPrefixCache, TierSpec
+from .engine import ServeEngine, Request

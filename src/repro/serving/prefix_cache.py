@@ -1,0 +1,134 @@
+"""Tiered prefix-KV cache with per-tier exact ChainedFilters — paper §5.4
+mapped from LSM SSTables to LM-serving cache tiers.
+
+Tiers model the serving memory hierarchy (HBM → host DRAM → SSD), each with
+a probe cost. A naive design probes tiers in order, paying a miss cost per
+tier crossed. Here every tier carries a dynamic exact ChainedFilter (Bloom
+stage-1 + Othello stage-2) whose *negatives are the keys of later tiers* —
+exactly the paper's SSTable construction. Consequences (Thm 4.1 / §5.4):
+
+- a filter fires only for keys in ITS tier and not in any later tier;
+- probing fired tiers in order, the first false positive proves all later
+  fired filters are false positives too ⇒ ≤ 1 wasted tier probe per lookup.
+
+Eviction demotes entries a tier down: the entry's key becomes a negative
+of the upper tier (stage-2 exclude) and a positive of the lower one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.bloom import BloomFilter, optimal_params
+from repro.core.othello import DynamicExactFilter, Othello
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    name: str
+    capacity: int                  # number of prefix entries
+    probe_cost_us: float           # cost of actually probing the tier
+
+
+@dataclass
+class _TierFilter:
+    """Dynamic exact ChainedFilter ('&' with dynamic parts, §4.3.1)."""
+    bloom: BloomFilter
+    exact: DynamicExactFilter
+
+    @classmethod
+    def fresh(cls, capacity: int, seed: int) -> "_TierFilter":
+        m, k = optimal_params(max(64, capacity), 0.02)
+        oth = Othello(ma=max(64, capacity * 2), mb=max(64, capacity * 2),
+                      seed=seed + 5)
+        return cls(bloom=BloomFilter(m_bits=m, k=k, seed=seed),
+                   exact=DynamicExactFilter(oth=oth))
+
+    def add_positive(self, key: np.uint64) -> None:
+        k = np.array([key], np.uint64)
+        self.bloom.insert(k)
+        self.exact.include(k)
+
+    def add_negative(self, key: np.uint64) -> None:
+        """A key that lives in a LATER tier (or was demoted out of this
+        one): ensure this tier's filter answers 'no' exactly."""
+        k = np.array([key], np.uint64)
+        if self.bloom.query(k)[0]:       # stage-1 false positive: whitelist
+            self.exact.exclude(k)
+
+    def query(self, key: np.uint64) -> bool:
+        k = np.array([key], np.uint64)
+        return bool(self.bloom.query(k)[0]) and bool(self.exact.query(k)[0])
+
+    @property
+    def bits(self) -> int:
+        return self.bloom.bits + self.exact.bits
+
+
+class TieredPrefixCache:
+    def __init__(self, tiers: list[TierSpec], seed: int = 0):
+        self.specs = tiers
+        self.filters = [_TierFilter.fresh(t.capacity, seed + 31 * i)
+                        for i, t in enumerate(tiers)]
+        self.store: list[dict] = [dict() for _ in tiers]   # key -> payload
+        self.lru: list[list] = [[] for _ in tiers]
+        self.probes = 0            # actual tier probes paid
+        self.wasted_probes = 0     # probes that found nothing
+        self.lookups = 0
+        self.probe_cost_paid_us = 0.0
+
+    # ------------------------------------------------------------- insert
+    def insert(self, key: int, payload, tier: int = 0) -> None:
+        key = np.uint64(key)
+        self._insert_at(key, payload, tier)
+
+    def _insert_at(self, key: np.uint64, payload, ti: int) -> None:
+        if ti >= len(self.specs):
+            return                                    # dropped off the end
+        spec = self.specs[ti]
+        if len(self.store[ti]) >= spec.capacity:
+            victim = self.lru[ti].pop(0)
+            vp = self.store[ti].pop(victim)
+            # demotion: upper tier must now answer 'no' for the victim...
+            self.filters[ti].add_negative(victim)
+            # ...and earlier tiers must keep answering 'no' (victim is now
+            # in a later tier) — they already do, it was below them.
+            self._insert_at(victim, vp, ti + 1)
+        self.store[ti][key] = payload
+        self.lru[ti].append(key)
+        self.filters[ti].add_positive(key)
+        # every EARLIER tier treats this key as a negative (paper Fig 11a)
+        for fj in range(ti):
+            self.filters[fj].add_negative(key)
+
+    # ------------------------------------------------------------- lookup
+    def lookup(self, key: int):
+        """Returns (payload | None, tier_index | None). Accounting mirrors
+        the paper: fired filters are probed in order; the first probe that
+        misses proves the rest are false positives (stop)."""
+        key = np.uint64(key)
+        self.lookups += 1
+        fired = [i for i, f in enumerate(self.filters) if f.query(key)]
+        for ti in fired:
+            self.probes += 1
+            self.probe_cost_paid_us += self.specs[ti].probe_cost_us
+            if key in self.store[ti]:
+                self.lru[ti].remove(key)
+                self.lru[ti].append(key)
+                return self.store[ti][key], ti
+            self.wasted_probes += 1
+            break                       # §5.4: later hits are false too
+        return None, None
+
+    # ---------------------------------------------------------- accounting
+    @property
+    def filter_bits(self) -> int:
+        return sum(f.bits for f in self.filters)
+
+    def stats(self) -> dict:
+        return {"lookups": self.lookups, "probes": self.probes,
+                "wasted_probes": self.wasted_probes,
+                "avg_probe_cost_us": (self.probe_cost_paid_us
+                                      / max(1, self.lookups)),
+                "filter_KiB": self.filter_bits / 8 / 1024}

@@ -1,0 +1,2 @@
+from .ctx import activation_sharding_ctx, shard_activation
+from .rules import ShardingRules, DEFAULT_RULES, sharding_for_axes, tree_shardings

@@ -1,0 +1,45 @@
+"""Activation-sharding context.
+
+Model code calls ``shard_activation(x, ('batch', 'seq', 'embed'))`` at layer
+boundaries. Outside a context (unit tests, CPU smoke runs) it is a no-op;
+inside ``activation_sharding_ctx(mesh, rules)`` it becomes a GSPMD
+``with_sharding_constraint`` so the compiler keeps activations distributed
+(batch over (pod, data), optionally sequence over model — Megatron-SP style)
+instead of letting propagation replicate them.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_tls = threading.local()
+
+
+def _current():
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh, rules):
+    """rules: ShardingRules (see rules.py). Nestable; inner wins."""
+    prev = _current()
+    _tls.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def shard_activation(x: jax.Array, axes: tuple) -> jax.Array:
+    """Constrain ``x`` (rank == len(axes)) to the mesh axes that ``rules``
+    assigns to each logical activation axis. No-op without a context or when
+    a dim is not divisible by its mesh-axis product."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from .rules import sharding_for_axes  # local import to avoid cycle
+    s = sharding_for_axes(mesh, rules, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, s)

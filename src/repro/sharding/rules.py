@@ -1,0 +1,126 @@
+"""Logical-axis → mesh-axis sharding rule engine.
+
+Every parameter leaf carries logical axes (``ParamSpec.axes``); activations
+pass logical axes to ``shard_activation``. A ``ShardingRules`` maps each
+logical axis name to a mesh axis (or tuple of mesh axes). The engine checks
+divisibility per-tensor: any logical axis whose dim is not divisible by the
+product of its mesh axes falls back to replicated for that tensor — JAX
+rejects uneven shards at jit boundaries, and silent fallback with a recorded
+note beats a crash on exotic head counts.
+
+Default layout (DESIGN.md §6):
+  TP over 'model'   — mlp, heads, vocab, expert (EP), kv_lora out-dim
+  FSDP over 'data'  — embed (d_model) dimension of weight matrices
+  DP over (pod, data) — activation batch
+  SP over 'model'   — activation sequence between blocks (optional)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _canon(v):
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """mapping: logical axis name -> mesh axis name(s) (or None)."""
+    mapping: dict = field(default_factory=dict)
+
+    def mesh_axes_for(self, logical: str):
+        return _canon(self.mapping.get(logical))
+
+    def override(self, **kv) -> "ShardingRules":
+        m = dict(self.mapping)
+        m.update(kv)
+        return ShardingRules(m)
+
+
+DEFAULT_MAPPING = {
+    # --- parameters ---
+    "embed": "data",            # FSDP: d_model dim of weights
+    "mlp": "model",             # TP
+    "heads": "model",           # TP
+    "kv_heads": "model",        # TP when divisible, else replicate
+    "head_dim": None,
+    "vocab": "model",           # TP on the vocabulary
+    "expert": "model",          # expert parallelism
+    "expert_router": None,
+    "kv_lora": None,            # MLA latent dim of weights (head-parallel TP)
+    "kv_cache_lora": "model",   # MLA compressed cache latent dim (512/16 ✓)
+    "ssm_inner": "model",       # mamba/rwkv inner channels
+    "ssm_state": None,
+    "conv": None,
+    "frames": None,
+    "layer": None,              # stacked-layer leading axis (scan) — never sharded
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "seq": None,                # attention q positions — keep unsharded
+    "seq_save": None,           # layer-boundary (remat-saved) activations;
+                                # 'model' = Megatron-style sequence parallelism
+    "seq_kv": None,
+    "kv_cache_batch": ("pod", "data"),
+    "kv_cache_heads": "model",
+    # KV cache head_dim: shards over 'model' exactly when kv_heads could not
+    # (duplicate-axis suppression keeps one of the two); 128/16 ✓.
+    "kv_cache_head_dim": "model",
+}
+
+DEFAULT_RULES = ShardingRules(DEFAULT_MAPPING)
+
+SP_RULES = DEFAULT_RULES.override(seq_save="model")  # Megatron-SP boundaries
+
+
+def _axis_size(mesh: Mesh, names: tuple) -> int:
+    return math.prod(mesh.shape[n] for n in names) if names else 1
+
+
+def partition_spec(mesh: Mesh, rules: ShardingRules, axes: tuple,
+                   shape: tuple) -> P:
+    """PartitionSpec for one tensor, with per-dim divisibility fallback and
+    duplicate-mesh-axis suppression (a mesh axis may shard only one dim)."""
+    used: set = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        names = rules.mesh_axes_for(logical) if logical else ()
+        names = tuple(n for n in names if n in mesh.shape)
+        if not names or any(n in used for n in names):
+            parts.append(None)
+            continue
+        size = _axis_size(mesh, names)
+        if size <= 1 or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(names)
+        parts.append(names[0] if len(names) == 1 else names)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for_axes(mesh: Mesh, rules: ShardingRules, axes: tuple,
+                      shape: tuple) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(mesh, rules, axes, shape))
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, axes_tree, shape_tree):
+    """Build a NamedSharding pytree for (axes_tree, shape_tree) in lockstep.
+    axes_tree leaves are tuples of logical names; shape_tree leaves are
+    ShapeDtypeStructs or arrays."""
+    def one(axes, ab):
+        shape = ab.shape
+        if axes is None or len(axes) != len(shape):
+            return NamedSharding(mesh, P())
+        return sharding_for_axes(mesh, rules, axes, shape)
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: x is None or (isinstance(x, tuple)
+                                                        and all(isinstance(e, (str, type(None))) for e in x)))

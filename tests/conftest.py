@@ -1,0 +1,13 @@
+"""Shared test config. Models execute in f32 on CPU (the CPU backend cannot
+run every bf16 dot); bf16 remains the dry-run/roofline target dtype.
+NOTE: no XLA_FLAGS here — smoke tests must see 1 device, not 512."""
+import jax.numpy as jnp
+import pytest
+
+from repro.models import common as MC
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _f32_compute():
+    MC.set_compute_dtype(jnp.float32)
+    yield

@@ -1,0 +1,111 @@
+"""Elementary filter invariants. THE invariant of the whole paper:
+one-sided error — a membership filter NEVER produces a false negative."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.core.bloom import BloomFilter, optimal_params
+from repro.core.bloomier import BloomierTable, XorFilter, ExactBloomier
+from repro.core.cuckoo import CuckooFilter, CuckooHashTable
+from repro.core.othello import DynamicExactFilter
+
+
+KEYS = H.random_keys(30_000, seed=42)
+
+
+@given(st.integers(10, 2000), st.floats(0.003, 0.2), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_bloom_no_false_negative(n, fpr, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(KEYS, size=n, replace=False)
+    f = BloomFilter.build(keys, fpr, seed=seed % 97)
+    assert f.query(keys).all()
+
+
+def test_bloom_fpr_close_to_target():
+    pos, neg = KEYS[:5000], KEYS[5000:25000]
+    for fpr in (0.05, 0.01):
+        f = BloomFilter.build(pos, fpr, seed=3)
+        got = f.query(neg).mean()
+        assert got < 2.2 * fpr, (fpr, got)
+
+
+def test_bloom_optimal_params_formula():
+    m, k = optimal_params(1000, 0.01)
+    assert abs(m - 1000 * 9.585) / m < 0.01       # n log2(e) log2(1/eps)
+    assert k in (6, 7)
+
+
+@pytest.mark.parametrize("mode", ["uniform", "fuse"])
+@pytest.mark.parametrize("alpha", [1, 4, 8, 16, 32])
+def test_bloomier_table_retrieval(mode, alpha):
+    """BloomierTable is a static function: must return the EXACT value for
+    every encoded key."""
+    keys = KEYS[:4000]
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 2 ** min(alpha, 31), size=len(keys)).astype(np.uint32)
+    t = BloomierTable.build(keys, vals, alpha, mode=mode, seed=2)
+    got = t.lookup(keys)
+    np.testing.assert_array_equal(got, vals & np.uint32((1 << alpha) - 1))
+
+
+@pytest.mark.parametrize("mode", ["uniform", "fuse"])
+def test_xor_filter_invariants(mode):
+    pos, neg = KEYS[:3000], KEYS[3000:23000]
+    for alpha in (4, 8, 12):
+        f = XorFilter.build(pos, alpha, mode=mode, seed=5)
+        assert f.query(pos).all(), "false negative!"
+        fpr = f.query(neg).mean()
+        assert fpr < 3.0 * 2.0 ** -alpha, (alpha, fpr)
+
+
+@pytest.mark.parametrize("strategy", ["a", "b"])
+def test_exact_bloomier_is_exact(strategy):
+    pos, neg = KEYS[:2000], KEYS[2000:12000]
+    f = ExactBloomier.build(pos, neg, strategy=strategy, seed=7)
+    assert f.query(pos).all()
+    assert not f.query(neg).any()
+
+
+def test_exact_bloomier_space_linear_in_universe():
+    pos, neg = KEYS[:1000], KEYS[1000:9000]
+    f = ExactBloomier.build(pos, neg, seed=1)
+    universe = len(pos) + len(neg)
+    assert f.bits <= 1.5 * universe     # C|U|; small-n fuse factor ~1.42
+
+
+def test_cuckoo_filter_invariants():
+    pos, neg = KEYS[:4000], KEYS[4000:24000]
+    f = CuckooFilter.build(pos, fpr=0.01, seed=3)
+    assert f.query(pos).all()
+    assert f.query(neg).mean() < 0.03
+
+
+def test_cuckoo_table_residency_and_accesses():
+    t = CuckooHashTable(M=4096, seed=1)
+    keys = KEYS[: int(2 * 4096 * 0.4)]          # r = 0.4
+    t.insert_many(keys)
+    w = t.which_table(keys)
+    assert set(np.unique(w)) <= {0, 1}
+    # perfect prediction ⇒ 1 access each; no prediction ⇒ 1 + P(T2)
+    perfect = t.lookup_accesses(keys, w).mean()
+    naive = t.lookup_accesses(keys).mean()
+    assert perfect == 1.0
+    assert naive > 1.2
+
+
+def test_othello_dynamic_updates():
+    pos, neg = KEYS[:800], KEYS[800:2400]
+    f = DynamicExactFilter.build(pos, neg, seed=3)
+    # dynamic exclusion of brand-new negatives
+    new_neg = KEYS[2400:2600]
+    f.exclude(new_neg)
+    assert not f.query(new_neg).any()
+    assert f.query(pos).all()
+    # dynamic inclusion of new positives
+    new_pos = KEYS[2600:2700]
+    f.include(new_pos)
+    assert f.query(new_pos).all()
+    assert f.query(pos).all()
+    assert not f.query(neg).any()

@@ -1,0 +1,68 @@
+"""32-bit lane hashing: numpy/jax bit-exactness, range reduction, mulhi."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_np_jax_hash_bit_exact(keys, seed):
+    keys = np.array(keys, dtype=np.uint64)
+    hi, lo = H.np_split_u64(keys)
+    a = H.np_hash_u32(hi, lo, seed)
+    b = np.asarray(H.jx_hash_u32(jnp.asarray(hi), jnp.asarray(lo), seed))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64),
+       st.integers(0, 2**31 - 1), st.integers(2, 2**30))
+@settings(max_examples=100, deadline=None)
+def test_fastrange_in_bounds_and_bit_exact(keys, seed, n):
+    keys = np.array(keys, dtype=np.uint64)
+    hi, lo = H.np_split_u64(keys)
+    a = H.np_hash_to_range(hi, lo, seed, n)
+    assert (a >= 0).all() and (a < n).all()
+    b = np.asarray(H.jx_hash_to_range(jnp.asarray(hi), jnp.asarray(lo), seed, n))
+    np.testing.assert_array_equal(a, b.astype(np.int64))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_mulhi32_exact(a, b):
+    """16-bit partial-product mulhi == true 64-bit high word."""
+    got = int(np.asarray(H.jx_mulhi32(jnp.uint32(a), b)))
+    assert got == (a * b) >> 32
+
+
+def test_uniformity_rough():
+    """Hash of 100k sequential keys spreads evenly over 64 buckets."""
+    keys = np.arange(100_000, dtype=np.uint64)
+    hi, lo = H.np_split_u64(keys)
+    idx = H.np_hash_to_range(hi, lo, 12345, 64)
+    counts = np.bincount(idx, minlength=64)
+    assert counts.min() > 0.8 * counts.mean()
+    assert counts.max() < 1.2 * counts.mean()
+
+
+def test_avalanche():
+    """Flipping one input bit flips ~half the output bits on average."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**64, 512, dtype=np.uint64)
+    hi, lo = H.np_split_u64(keys)
+    base = H.np_hash_u32(hi, lo, 7)
+    flips = []
+    for bit in range(0, 64, 7):
+        k2 = keys ^ np.uint64(1 << bit)
+        h2, l2 = H.np_split_u64(k2)
+        x = H.np_hash_u32(h2, l2, 7) ^ base
+        flips.append(np.unpackbits(x.view(np.uint8)).mean())
+    m = float(np.mean(flips))
+    assert 0.45 < m < 0.55, m
+
+
+def test_random_keys_distinct():
+    k = H.random_keys(5000, seed=3)
+    assert len(np.unique(k)) == 5000

@@ -1,0 +1,72 @@
+"""Optimizer, schedules and gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_step, global_norm
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compress import (CompressionConfig, compress_grads,
+                                  decompress_grads)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+    tgt = jnp.asarray([1.0, 2.0, -1.0])
+    loss = lambda p: jnp.sum((p["w"] - tgt) ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_step(cfg, params, g, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(tgt),
+                               atol=1e-2)
+
+
+def test_grad_clip_engages():
+    cfg = AdamWConfig(lr=1e-3, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw_step(cfg, params, huge, opt)
+    assert float(metrics["grad_norm"]) > 1e6 - 1
+
+
+def test_schedules_shapes():
+    s0 = float(linear_warmup_cosine(jnp.int32(0), 10, 100))
+    s10 = float(linear_warmup_cosine(jnp.int32(10), 10, 100))
+    send = float(linear_warmup_cosine(jnp.int32(100), 10, 100))
+    assert s0 == 0.0 and abs(s10 - 1.0) < 1e-5 and send <= 0.11
+    assert abs(float(cosine_schedule(jnp.int32(0), 100)) - 1.0) < 1e-6
+
+
+def test_bf16_compression_roundtrip():
+    cfg = CompressionConfig(mode="bf16")
+    g = {"a": jnp.asarray([1.0, 2.0, 3.0]), "b": jnp.asarray([[0.5]])}
+    wire, aux = compress_grads(cfg, g)
+    assert all(w.dtype == jnp.bfloat16 for w in jax.tree.leaves(wire))
+    back = decompress_grads(cfg, wire, aux)
+    np.testing.assert_allclose(np.asarray(back["a"]), [1, 2, 3], rtol=1e-2)
+
+
+def test_int8_error_feedback_unbiased_over_steps():
+    """With error feedback the accumulated quantized sum tracks the true
+    gradient sum (the EF-SGD guarantee, here verified numerically)."""
+    cfg = CompressionConfig(mode="int8_ef")
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(32)
+    q_sum = np.zeros(32)
+    err = None
+    for _ in range(200):
+        g = {"w": jnp.asarray(rng.normal(size=32) * 0.1, jnp.float32)}
+        wire, aux = compress_grads(cfg, g, err)
+        deq = decompress_grads(cfg, wire, aux)
+        err = {"w": aux["residual"]["w"]}
+        true_sum += np.asarray(g["w"])
+        q_sum += np.asarray(deq["w"])
+    resid = float(np.abs(np.asarray(err["w"])).max())
+    np.testing.assert_allclose(q_sum, true_sum, atol=resid * 1.5 + 1e-3)
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6

@@ -1,0 +1,79 @@
+"""Serving: tiered prefix cache (paper §5.4 mapped to LM serving) + engine."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.serving.prefix_cache import TieredPrefixCache, TierSpec
+from repro.serving.engine import ServeEngine, Request
+from repro.configs import get_arch
+from repro.models.common import init_from_specs
+
+
+def _tiers():
+    return [TierSpec("hbm", 4, 1.0), TierSpec("dram", 8, 10.0),
+            TierSpec("ssd", 64, 150.0)]
+
+
+def test_prefix_cache_hit_and_tier_demotion():
+    pc = TieredPrefixCache(_tiers(), seed=1)
+    for k in range(10):                       # overflows tier 0 (cap 4)
+        pc.insert(1000 + k, payload=f"p{k}")
+    # oldest entries demoted to tier 1
+    hit, tier = pc.lookup(1000)
+    assert hit == "p0" and tier == 1
+    hit, tier = pc.lookup(1009)
+    assert hit == "p9" and tier == 0
+
+
+def test_prefix_cache_at_most_one_wasted_probe():
+    """THE §5.4 invariant: per lookup, wasted tier probes ≤ 1 — fired
+    filters are exact over the cache's key universe; only out-of-universe
+    keys can waste a probe, and the first wasted probe stops the scan."""
+    pc = TieredPrefixCache(_tiers(), seed=2)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(1, 2**62, 60).tolist()
+    for i, k in enumerate(keys):
+        pc.insert(k, payload=i)
+    before = pc.wasted_probes
+    # query all present keys: every lookup must pay exactly ONE probe
+    for k in keys:
+        payload, tier = pc.lookup(k)
+        assert payload is not None
+    assert pc.wasted_probes == before
+    # query 200 unknown keys: each wastes at most one probe
+    miss_probes = []
+    for k in rng.integers(2**62, 2**63, 200).tolist():
+        p0 = pc.probes
+        payload, _ = pc.lookup(k)
+        assert payload is None
+        miss_probes.append(pc.probes - p0)
+    assert max(miss_probes) <= 1
+
+
+def test_prefix_cache_filter_small():
+    pc = TieredPrefixCache(_tiers(), seed=3)
+    for i in range(50):
+        pc.insert(7_000 + i, payload=i)
+    s = pc.stats()
+    assert s["filter_KiB"] < 64
+
+
+def test_engine_prefix_reuse_and_greedy_equivalence():
+    arch = get_arch("llama3.2-1b")
+    m = arch.model(smoke=True)
+    params = init_from_specs(m.param_specs(), jax.random.key(0))
+    eng = ServeEngine(m, params, max_len=48)
+    prompt = np.arange(8, dtype=np.int32)
+    r1 = Request(rid=1, prompt=prompt, max_new=4)
+    r2 = Request(rid=2, prompt=prompt.copy(), max_new=4)   # same prefix
+    eng.run([r1])
+    eng.run([r2])
+    assert r1.output == r2.output                  # cache hit is lossless
+    s = eng.stats()
+    assert s["prefill_tokens_saved_frac"] > 0.4    # second request free
+    # and matches a fresh engine without any cache reuse
+    eng2 = ServeEngine(m, params, max_len=48)
+    r3 = Request(rid=3, prompt=prompt.copy(), max_new=4)
+    eng2.run([r3])
+    assert r3.output == r1.output

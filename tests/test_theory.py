@@ -1,0 +1,69 @@
+"""Chain-rule theory (paper §2): lower bound + lossless factorization."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+
+def test_extreme_case_approximate():
+    # f(eps, inf) -> log2(1/eps)
+    for eps in (0.5, 0.1, 0.01):
+        assert abs(theory.f_lower_bound(eps, 1e9) - math.log2(1 / eps)) < 1e-3
+
+
+def test_extreme_case_exact():
+    # f(0, lam) = (lam+1) H(1/(lam+1))
+    for lam in (1.0, 3.0, 16.0):
+        expect = (lam + 1) * theory.entropy(1 / (lam + 1))
+        assert abs(theory.f_lower_bound(0.0, lam) - expect) < 1e-12
+
+
+@given(st.floats(1e-6, 1.0), st.floats(1e-3, 1e4), st.floats(0.0, 1.0))
+@settings(max_examples=300, deadline=None)
+def test_chain_rule_lossless(eps, lam, t):
+    """Theorem 2.2: f(eps,lam) = f(eps',lam) + f(eps/eps', eps' lam) for ANY
+    intermediate eps' — the factorization never costs space."""
+    eps_prime = eps + (1.0 - eps) * t
+    assert theory.chain_rule_gap(eps, lam, eps_prime) < 1e-9
+
+
+@given(st.floats(1e-6, 0.999), st.floats(1e-3, 1e4))
+@settings(max_examples=200, deadline=None)
+def test_lower_bound_monotone_in_eps(eps, lam):
+    """Smaller fpr can never need less space."""
+    assert (theory.f_lower_bound(eps, lam)
+            <= theory.f_lower_bound(eps * 0.5, lam) + 1e-12)
+
+
+def test_chained_space_beats_exact_bloomier():
+    """§4.1: ChainedFilter space < exact Bloomier for lam > 1/ln2."""
+    for lam in (2.0, 4.0, 8.0, 16.0):
+        assert (theory.chained_and_space_exact(lam)
+                < theory.exact_bloomier_space(lam))
+
+
+def test_chained_space_within_11pct_of_bound():
+    """Remark of Thm 4.1: rounded cost < 1.11 C f(0, lam)."""
+    C = 1.0
+    for lam in [2 ** k for k in range(1, 12)]:
+        ratio = (theory.chained_and_space_exact_rounded(lam, C=C)
+                 / theory.f_lower_bound(0.0, lam))
+        assert ratio < 1.11, (lam, ratio)
+
+
+def test_corollary_4_1_general_eps():
+    f, strat, beta = theory.corollary_4_1_space(0.01, 16.0)
+    assert strat in ("a", "b")
+    assert 0.0 <= beta <= 1.0 / theory.LN2
+    assert theory.f_lower_bound(0.01, 16.0) <= f <= 1.13 * (16.0 + 1.0)
+
+
+def test_cuckoo_lambda_monotone():
+    """Theorem 5.2: lambda decreases as load factor rises; 31% accesses
+    removed at r=0.4."""
+    lams = [theory.cuckoo_lambda(r) for r in (0.1, 0.2, 0.3, 0.4)]
+    assert all(a > b for a, b in zip(lams, lams[1:]))
+    from repro.core.adaptive import expected_access_reduction
+    assert abs(expected_access_reduction(0.4) - 0.31) < 0.02
