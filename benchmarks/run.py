@@ -1,16 +1,23 @@
 """Benchmark driver: one benchmark per paper table/figure + the roofline
-table from dry-run artifacts.
+table from dry-run artifacts + the serving FilterBank probe bench.
 
     PYTHONPATH=src python -m benchmarks.run            # CI scale
     BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper scale (1M keys)
+
+Each benchmark's ``run()`` returns either a printable string or a
+``(string, metrics_dict)`` pair; numbers land in ``BENCH_results.json``
+(uploaded as a CI artifact by the bench-smoke job).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
 
 import jax.numpy as jnp
+
+RESULTS_PATH = "BENCH_results.json"
 
 
 def main() -> int:
@@ -18,7 +25,7 @@ def main() -> int:
     MC.set_compute_dtype(jnp.float32)        # CPU execution dtype
 
     from . import (chain_rule, static_dictionary, huffman, adaptive_hashing,
-                   lsm_pointquery, learned_filter, roofline)
+                   lsm_pointquery, learned_filter, roofline, filter_service)
     benches = [
         ("chain_rule (§2)", chain_rule.run),
         ("static_dictionary (§5.1, Fig 6/7)", static_dictionary.run),
@@ -27,18 +34,31 @@ def main() -> int:
         ("lsm_pointquery (§5.4, Fig 12)", lsm_pointquery.run),
         ("learned_filter (§5.5, Fig 13)", learned_filter.run),
         ("roofline (dry-run artifacts)", roofline.run),
+        ("filter_service (fused cascade vs per-layer)", filter_service.run),
     ]
     failures = 0
+    results: dict = {}
     for name, fn in benches:
         t0 = time.perf_counter()
         try:
             out = fn()
+            metrics = None
+            if isinstance(out, tuple):
+                out, metrics = out
+            seconds = time.perf_counter() - t0
             print(out)
-            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s",
-                  flush=True)
+            print(f"[{name}] done in {seconds:.1f}s", flush=True)
+            results[name] = {"ok": True, "seconds": seconds}
+            if metrics is not None:
+                results[name]["metrics"] = metrics
         except Exception:
             failures += 1
+            seconds = time.perf_counter() - t0
             print(f"[{name}] FAILED:\n{traceback.format_exc()}", flush=True)
+            results[name] = {"ok": False, "seconds": seconds}
+    with open(RESULTS_PATH, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {RESULTS_PATH}", flush=True)
     return 1 if failures else 0
 
 

@@ -80,6 +80,22 @@ class BloomFilter:
             out &= ((w >> (idx & 31).astype(jnp.uint32)) & 1) == 1
         return out
 
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        """(uint32 tables, BloomTable layout) — see core.tables."""
+        from .tables import BloomTable, pad_words
+        tables = pad_words(self.words)
+        return tables, BloomTable(offset=0, width=len(tables),
+                                  m_bits=self.m_bits, k=self.k, seed=self.seed)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "BloomFilter":
+        n_words = (layout.m_bits + 31) // 32
+        words = np.array(tables[layout.offset:layout.offset + n_words],
+                         dtype=np.uint32)
+        return cls(m_bits=layout.m_bits, k=layout.k, seed=layout.seed,
+                   words=words)
+
     # -- accounting ----------------------------------------------------------
     @property
     def bits(self) -> int:

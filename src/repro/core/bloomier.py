@@ -222,6 +222,25 @@ class XorFilter:
         fps = H.jx_hash_u32(hi, lo, self.fp_seed) & jnp.uint32((1 << self.alpha) - 1)
         return self.tbl.lookup_jax(hi, lo) == fps
 
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        from .tables import XorTable, pad_words
+        lay = self.tbl.layout
+        tables = pad_words(self.tbl.table)
+        return tables, XorTable(offset=0, width=len(tables), mode=lay.mode,
+                                seed=lay.seed, seg_len=lay.seg_len,
+                                n_seg=lay.n_seg, alpha=self.tbl.alpha,
+                                fp_seed=self.fp_seed)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "XorFilter":
+        slot_layout = SlotLayout(layout.mode, layout.n_seg * layout.seg_len,
+                                 layout.seg_len, layout.n_seg, layout.seed)
+        table = np.array(tables[layout.offset:layout.offset + slot_layout.m],
+                         dtype=np.uint32)
+        tbl = BloomierTable(layout=slot_layout, alpha=layout.alpha, table=table)
+        return cls(tbl=tbl, fp_seed=layout.fp_seed)
+
     @property
     def alpha(self) -> int:
         return self.tbl.alpha
@@ -285,6 +304,25 @@ class ExactBloomier:
             h1b = H.jx_hash_u32(hi, lo, self.bit_seed) & jnp.uint32(1)
             return got == h1b
         return got == jnp.uint32(1)
+
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        from .tables import ExactTable, pad_words
+        lay = self.tbl.layout
+        tables = pad_words(self.tbl.table)
+        return tables, ExactTable(offset=0, width=len(tables), mode=lay.mode,
+                                  seed=lay.seed, seg_len=lay.seg_len,
+                                  n_seg=lay.n_seg, strategy=self.strategy,
+                                  bit_seed=self.bit_seed)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "ExactBloomier":
+        slot_layout = SlotLayout(layout.mode, layout.n_seg * layout.seg_len,
+                                 layout.seg_len, layout.n_seg, layout.seed)
+        table = np.array(tables[layout.offset:layout.offset + slot_layout.m],
+                         dtype=np.uint32)
+        tbl = BloomierTable(layout=slot_layout, alpha=1, table=table)
+        return cls(tbl=tbl, strategy=layout.strategy, bit_seed=layout.bit_seed)
 
     @property
     def bits(self) -> int:

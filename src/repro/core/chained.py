@@ -97,6 +97,32 @@ class ChainedFilterAnd:
         s1 = self.f1.query(keys) if self.f1 is not None else np.ones(len(keys), bool)
         return s1, s1  # stage-2 lookups happen exactly for stage-1 passers
 
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        from .tables import ChainedAndLayout, concat_tables
+        parts = []
+        xor_lay = None
+        if self.f1 is not None:
+            parts.append(self.f1.to_tables())
+        parts.append(self.f2.to_tables())
+        tables, layouts = concat_tables(parts)
+        if self.f1 is not None:
+            xor_lay, exact_lay = layouts
+        else:
+            (exact_lay,) = layouts
+        return tables, ChainedAndLayout(xor=xor_lay, exact=exact_lay,
+                                        eps=self.eps, n_pos=self.n_pos,
+                                        n_neg=self.n_neg,
+                                        n_false_pos=self.n_false_pos)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "ChainedFilterAnd":
+        f1 = (None if layout.xor is None
+              else XorFilter.from_tables(tables, layout.xor))
+        f2 = ExactBloomier.from_tables(tables, layout.exact)
+        return cls(f1=f1, f2=f2, eps=layout.eps, n_pos=layout.n_pos,
+                   n_neg=layout.n_neg, n_false_pos=layout.n_false_pos)
+
     @property
     def bits(self) -> int:
         return (self.f1.bits if self.f1 is not None else 0) + self.f2.bits
@@ -224,6 +250,19 @@ class ChainedFilterCascade:
                                                seed=977 * len(self.layers) + 13))
                 self.layers[-1].set_bits_for(stuck)
         return errs
+
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        from .tables import CascadeLayout, concat_tables
+        tables, layouts = concat_tables([f.to_tables() for f in self.layers])
+        return tables, CascadeLayout(layers=layouts, n_pos=self.n_pos,
+                                     n_neg=self.n_neg, delta=self.delta)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "ChainedFilterCascade":
+        layers = [BloomFilter.from_tables(tables, t) for t in layout.layers]
+        return cls(layers=layers, n_pos=layout.n_pos, n_neg=layout.n_neg,
+                   delta=layout.delta)
 
     @property
     def bits(self) -> int:

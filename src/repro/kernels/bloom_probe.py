@@ -4,6 +4,10 @@ The word array lives whole in VMEM (BlockSpec index_map pins it per grid
 step; Mosaic hoists the reload); key lanes stream as (8,128) uint32 tiles.
 All k probes are unrolled — k is small (≤ 16) and static — so the body is
 pure VPU bitwise work plus k vectorized VMEM gathers, no scalar loop.
+
+``words`` may be a packed FilterBank buffer (core.tables): the static
+``offset`` selects this filter's word slice, sharing one VMEM residency
+across every filter in the bank.
 """
 from __future__ import annotations
 
@@ -13,34 +17,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import hashing as H
-from .common import BLOCK_ROWS, BLOCK_COLS
+from .common import BLOCK_ROWS, BLOCK_COLS, bloom_hit
 
 
-def _kernel(words_ref, hi_ref, lo_ref, out_ref, *, m_bits: int, k: int, seed: int):
-    hi = hi_ref[...]
-    lo = lo_ref[...]
-    words = words_ref[...]
-    out = jnp.ones(hi.shape, dtype=jnp.int32)
-    for i in range(k):  # static unroll
-        idx = H.jx_hash_to_range(hi, lo, seed * 1000 + i, m_bits)
-        w = jnp.take(words, idx >> 5, axis=0)
-        bit = (w >> (idx & 31).astype(jnp.uint32)) & 1
-        out &= bit.astype(jnp.int32)
-    out_ref[...] = out
+def _kernel(words_ref, hi_ref, lo_ref, out_ref, *, m_bits: int, k: int,
+            seed: int, offset: int):
+    hit = bloom_hit(words_ref[...], hi_ref[...], lo_ref[...],
+                    m_bits=m_bits, k=k, seed=seed, offset=offset)
+    out_ref[...] = hit.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("m_bits", "k", "seed", "interpret"))
+@functools.partial(jax.jit, static_argnames=("m_bits", "k", "seed", "offset",
+                                             "interpret"))
 def bloom_probe(words: jnp.ndarray, hi2d: jnp.ndarray, lo2d: jnp.ndarray,
-                *, m_bits: int, k: int, seed: int, interpret: bool = True
-                ) -> jnp.ndarray:
+                *, m_bits: int, k: int, seed: int, offset: int = 0,
+                interpret: bool = True) -> jnp.ndarray:
     """words: uint32 [W] (W % 128 == 0); hi2d/lo2d: uint32 [R, 128] with
     R % 8 == 0. Returns int32 [R, 128] (1 = maybe-member)."""
     R = hi2d.shape[0]
     grid = (R // BLOCK_ROWS,)
     W = words.shape[0]
     return pl.pallas_call(
-        functools.partial(_kernel, m_bits=m_bits, k=k, seed=seed),
+        functools.partial(_kernel, m_bits=m_bits, k=k, seed=seed,
+                          offset=offset),
         grid=grid,
         in_specs=[
             pl.BlockSpec((W,), lambda i: (0,)),                     # table: VMEM-resident

@@ -1,10 +1,15 @@
 """Pallas TPU kernel: fused ChainedFilterAnd probe (stage1 ∧ stage2).
 
 The CPU reference short-circuits stage 2 for stage-1 rejects; on TPU the
-branch-free fused form is faster: both tables are VMEM-resident, the six
+branch-free fused form is faster: both tables live in ONE packed
+VMEM-resident buffer (core.tables layout, static word offsets), the six
 gathers + bitwise reduce cost less than any divergence machinery, and the
 key tile is loaded exactly once (the paper's §5.2 'shared address' locality
 trick, lifted to VMEM tiles).
+
+Outputs both membership and the per-key *sequential probe count*
+(1 + stage-1 pass: a sequential querier touches stage 2 only when stage 1
+fires — the paper's Fig 7b memory-access accounting).
 """
 from __future__ import annotations
 
@@ -15,53 +20,64 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import hashing as H
-from .common import BLOCK_ROWS, BLOCK_COLS
-from .xor_probe import _lookup
+from .common import BLOCK_ROWS, BLOCK_COLS, xor_lookup
 
 
-def _kernel(t1_ref, t2_ref, hi_ref, lo_ref, out_ref, *,
-            l1: tuple, l2: tuple, alpha: int, fp_seed: int,
+def _kernel(tables_ref, hi_ref, lo_ref, member_ref, probes_ref, *,
+            l1: tuple | None, l2: tuple, alpha: int, fp_seed: int,
             strategy: str, bit_seed: int):
-    mode1, seed1, seg1, nseg1 = l1
-    mode2, seed2, seg2, nseg2 = l2
     hi = hi_ref[...]
     lo = lo_ref[...]
-    # stage 1: α-bit fingerprint match
-    v1 = _lookup(t1_ref[...], hi, lo, mode=mode1, seed=seed1, seg_len=seg1,
-                 n_seg=nseg1, alpha=alpha)
-    fp = H.jx_hash_u32(hi, lo, fp_seed) & jnp.uint32((1 << alpha) - 1)
-    s1 = v1 == fp
+    tables = tables_ref[...]
+    if l1 is not None:
+        # stage 1: α-bit fingerprint match
+        mode1, seed1, seg1, nseg1, off1 = l1
+        v1 = xor_lookup(tables, hi, lo, mode=mode1, seed=seed1, seg_len=seg1,
+                        n_seg=nseg1, alpha=alpha, offset=off1)
+        fp = H.jx_hash_u32(hi, lo, fp_seed) & jnp.uint32((1 << alpha) - 1)
+        s1 = v1 == fp
+    else:
+        s1 = jnp.ones(hi.shape, dtype=bool)    # degenerate: exact stage only
     # stage 2: exact 1-bit Bloomier
-    v2 = _lookup(t2_ref[...], hi, lo, mode=mode2, seed=seed2, seg_len=seg2,
-                 n_seg=nseg2, alpha=1)
+    mode2, seed2, seg2, nseg2, off2 = l2
+    v2 = xor_lookup(tables, hi, lo, mode=mode2, seed=seed2, seg_len=seg2,
+                    n_seg=nseg2, alpha=1, offset=off2)
     if strategy == "a":
         tgt = H.jx_hash_u32(hi, lo, bit_seed) & jnp.uint32(1)
     else:
         tgt = jnp.uint32(1)
-    out_ref[...] = (s1 & (v2 == tgt)).astype(jnp.int32)
+    member_ref[...] = (s1 & (v2 == tgt)).astype(jnp.int32)
+    if l1 is not None:
+        probes_ref[...] = 1 + s1.astype(jnp.int32)
+    else:
+        probes_ref[...] = jnp.ones(hi.shape, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("l1", "l2", "alpha", "fp_seed",
                                              "strategy", "bit_seed", "interpret"))
-def chained_probe(t1, t2, hi2d, lo2d, *, l1: tuple, l2: tuple, alpha: int,
-                  fp_seed: int, strategy: str, bit_seed: int,
+def chained_probe(tables, hi2d, lo2d, *, l1: tuple | None, l2: tuple,
+                  alpha: int, fp_seed: int, strategy: str, bit_seed: int,
                   interpret: bool = True):
-    """l1/l2 = (mode, seed, seg_len, n_seg) static layout tuples."""
+    """tables: packed uint32 buffer holding both stages.
+    l1/l2 = (mode, seed, seg_len, n_seg, offset) static layout tuples;
+    l1 may be None (degenerate λ: no stage 1).
+    Returns (member, probes) int32 [R, 128] pairs."""
     R = hi2d.shape[0]
-    W1, W2 = t1.shape[0], t2.shape[0]
+    W = tables.shape[0]
     kern = functools.partial(_kernel, l1=l1, l2=l2, alpha=alpha,
                              fp_seed=fp_seed, strategy=strategy,
                              bit_seed=bit_seed)
+    tile = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
     return pl.pallas_call(
         kern,
         grid=(R // BLOCK_ROWS,),
         in_specs=[
-            pl.BlockSpec((W1,), lambda i: (0,)),   # stage-1 table, VMEM-resident
-            pl.BlockSpec((W2,), lambda i: (0,)),   # stage-2 table, VMEM-resident
-            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((W,), lambda i: (0,)),   # packed tables, VMEM-resident
+            tile,
+            tile,
         ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, BLOCK_COLS), jnp.int32),
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((R, BLOCK_COLS), jnp.int32),
+                   jax.ShapeDtypeStruct((R, BLOCK_COLS), jnp.int32)],
         interpret=interpret,
-    )(t1, t2, hi2d, lo2d)
+    )(tables, hi2d, lo2d)

@@ -14,18 +14,60 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import hashing as H
+from repro.core.tables import pad_words
+
 # (sublane, lane) tile of the TPU VPU for 32-bit elements
 BLOCK_ROWS = 8
 BLOCK_COLS = 128
 BLOCK = BLOCK_ROWS * BLOCK_COLS
 
 
+# ---------------------------------------------------------------------------
+# packed-table lookups — shared by every probe kernel body
+#
+# All helpers take a word ``offset`` into a packed FilterBank buffer
+# (core.tables), so N heterogeneous filters can live in ONE VMEM-resident
+# uint32 array and each kernel gathers from its own slice. offset=0 recovers
+# the single-filter case.
+# ---------------------------------------------------------------------------
+
+def bloom_hit(words, hi, lo, *, m_bits: int, k: int, seed: int,
+              offset: int = 0):
+    """Bloom membership over a packed word buffer -> bool, shape of (hi, lo)."""
+    out = jnp.ones(hi.shape, dtype=bool)
+    for i in range(k):  # static unroll: k is small (≤ 16)
+        idx = H.jx_hash_to_range(hi, lo, seed * 1000 + i, m_bits)
+        w = jnp.take(words, offset + (idx >> 5), axis=0)
+        out &= ((w >> (idx & 31).astype(jnp.uint32)) & 1) == 1
+    return out
+
+
+def xor_slots(hi, lo, *, mode: str, seed: int, seg_len: int, n_seg: int,
+              offset: int = 0):
+    """The three Bloomier slot indices (uniform or fuse layout), pre-offset."""
+    if mode == "uniform":
+        return tuple(offset + i * seg_len
+                     + H.jx_hash_to_range(hi, lo, seed * 7919 + i, seg_len)
+                     for i in range(3))
+    start = H.jx_hash_to_range(hi, lo, seed * 7919 + 3, n_seg - 2)
+    return tuple(offset + (start + i) * seg_len
+                 + H.jx_hash_to_range(hi, lo, seed * 7919 + i, seg_len)
+                 for i in range(3))
+
+
+def xor_lookup(table, hi, lo, *, mode: str, seed: int, seg_len: int,
+               n_seg: int, alpha: int, offset: int = 0):
+    """BloomierTable.lookup over a packed buffer -> α-bit uint32 values."""
+    s0, s1, s2 = xor_slots(hi, lo, mode=mode, seed=seed, seg_len=seg_len,
+                           n_seg=n_seg, offset=offset)
+    v = (jnp.take(table, s0, axis=0) ^ jnp.take(table, s1, axis=0)
+         ^ jnp.take(table, s2, axis=0))
+    return v & jnp.uint32((1 << alpha) - 1)
+
+
 def pad_table(table: np.ndarray, multiple: int = BLOCK_COLS) -> np.ndarray:
-    m = len(table)
-    pad = (-m) % multiple
-    if pad:
-        table = np.concatenate([table, np.zeros(pad, dtype=table.dtype)])
-    return table
+    return pad_words(table, multiple)
 
 
 def blockify(hi: np.ndarray, lo: np.ndarray):

@@ -11,12 +11,13 @@ import jax.numpy as jnp
 from repro.core import hashing as H
 from repro.core.bloom import BloomFilter
 from repro.core.bloomier import XorFilter, ExactBloomier
-from repro.core.chained import ChainedFilterAnd
+from repro.core.chained import ChainedFilterAnd, ChainedFilterCascade
 
 from . import common
 from .bloom_probe import bloom_probe
 from .xor_probe import xor_probe, exact_probe
 from .chained_probe import chained_probe
+from .cascade_probe import cascade_probe
 
 
 def _prep_keys(keys: np.ndarray):
@@ -54,18 +55,36 @@ def exact_query(f: ExactBloomier, keys: np.ndarray, interpret: bool = True) -> n
     return np.asarray(common.unblockify(out, n)).astype(bool)
 
 
+def chained_and_params(layout) -> dict:
+    """Static kwargs for ``chained_probe`` from a ChainedAndLayout."""
+    x, e = layout.xor, layout.exact
+    return dict(
+        l1=None if x is None else (x.mode, x.seed, x.seg_len, x.n_seg, x.offset),
+        l2=(e.mode, e.seed, e.seg_len, e.n_seg, e.offset),
+        alpha=0 if x is None else x.alpha,
+        fp_seed=0 if x is None else x.fp_seed,
+        strategy=e.strategy, bit_seed=e.bit_seed)
+
+
 def chained_query(f: ChainedFilterAnd, keys: np.ndarray, interpret: bool = True) -> np.ndarray:
-    if f.f1 is None:  # degenerate: exact stage only
-        return exact_query(f.f2, keys, interpret=interpret)
     hi2d, lo2d, n = _prep_keys(keys)
-    lay1, lay2 = f.f1.tbl.layout, f.f2.tbl.layout
-    t1 = jnp.asarray(common.pad_table(f.f1.tbl.table))
-    t2 = jnp.asarray(common.pad_table(f.f2.tbl.table))
-    out = chained_probe(
-        t1, t2, hi2d, lo2d,
-        l1=(lay1.mode, lay1.seed, lay1.seg_len, lay1.n_seg),
-        l2=(lay2.mode, lay2.seed, lay2.seg_len, lay2.n_seg),
-        alpha=f.f1.tbl.alpha, fp_seed=f.f1.fp_seed,
-        strategy=f.f2.strategy, bit_seed=f.f2.bit_seed,
-        interpret=interpret)
-    return np.asarray(common.unblockify(out, n)).astype(bool)
+    tables, layout = f.to_tables()
+    member, _ = chained_probe(jnp.asarray(tables), hi2d, lo2d,
+                              interpret=interpret,
+                              **chained_and_params(layout))
+    return np.asarray(common.unblockify(member, n)).astype(bool)
+
+
+def cascade_query(f: ChainedFilterCascade, keys: np.ndarray,
+                  interpret: bool = True, with_probes: bool = False):
+    """Fused whole-cascade probe: bool member [n] (and sequential probe
+    counts [n] when ``with_probes``)."""
+    hi2d, lo2d, n = _prep_keys(keys)
+    tables, layout = f.to_tables()
+    member, probes = cascade_probe(jnp.asarray(tables), hi2d, lo2d,
+                                   layers=layout.probe_params(),
+                                   interpret=interpret)
+    out = np.asarray(common.unblockify(member, n)).astype(bool)
+    if with_probes:
+        return out, np.asarray(common.unblockify(probes, n))
+    return out

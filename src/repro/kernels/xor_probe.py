@@ -3,6 +3,9 @@
 Covers both the approximate (α-bit fingerprint) and exact (1-bit, strategy
 a/b) Bloomier variants — the exact case is the α=1 path with the fingerprint
 replaced by the strategy bit. Table VMEM-resident, keys in (8,128) tiles.
+The slot/lookup math lives in common.py (shared with the fused chained and
+cascade kernels) and takes a static ``offset`` so the table may be a slice
+of a packed FilterBank buffer.
 """
 from __future__ import annotations
 
@@ -13,41 +16,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import hashing as H
-from .common import BLOCK_ROWS, BLOCK_COLS
-
-
-def _slots(hi, lo, *, mode, seed, seg_len, n_seg):
-    if mode == "uniform":
-        return tuple(i * seg_len + H.jx_hash_to_range(hi, lo, seed * 7919 + i, seg_len)
-                     for i in range(3))
-    start = H.jx_hash_to_range(hi, lo, seed * 7919 + 3, n_seg - 2)
-    return tuple((start + i) * seg_len + H.jx_hash_to_range(hi, lo, seed * 7919 + i, seg_len)
-                 for i in range(3))
-
-
-def _lookup(table, hi, lo, *, mode, seed, seg_len, n_seg, alpha):
-    s0, s1, s2 = _slots(hi, lo, mode=mode, seed=seed, seg_len=seg_len, n_seg=n_seg)
-    v = (jnp.take(table, s0, axis=0) ^ jnp.take(table, s1, axis=0)
-         ^ jnp.take(table, s2, axis=0))
-    return v & jnp.uint32((1 << alpha) - 1)
+from .common import BLOCK_ROWS, BLOCK_COLS, xor_lookup
 
 
 def _kernel(table_ref, hi_ref, lo_ref, out_ref, *, mode, seed, seg_len, n_seg,
-            alpha, fp_seed):
+            alpha, fp_seed, offset):
     hi = hi_ref[...]
     lo = lo_ref[...]
-    v = _lookup(table_ref[...], hi, lo, mode=mode, seed=seed, seg_len=seg_len,
-                n_seg=n_seg, alpha=alpha)
+    v = xor_lookup(table_ref[...], hi, lo, mode=mode, seed=seed,
+                   seg_len=seg_len, n_seg=n_seg, alpha=alpha, offset=offset)
     fp = H.jx_hash_u32(hi, lo, fp_seed) & jnp.uint32((1 << alpha) - 1)
     out_ref[...] = (v == fp).astype(jnp.int32)
 
 
 def _kernel_exact(table_ref, hi_ref, lo_ref, out_ref, *, mode, seed, seg_len,
-                  n_seg, strategy, bit_seed):
+                  n_seg, strategy, bit_seed, offset):
     hi = hi_ref[...]
     lo = lo_ref[...]
-    v = _lookup(table_ref[...], hi, lo, mode=mode, seed=seed, seg_len=seg_len,
-                n_seg=n_seg, alpha=1)
+    v = xor_lookup(table_ref[...], hi, lo, mode=mode, seed=seed,
+                   seg_len=seg_len, n_seg=n_seg, alpha=1, offset=offset)
     if strategy == "a":
         tgt = H.jx_hash_u32(hi, lo, bit_seed) & jnp.uint32(1)
     else:
@@ -73,18 +60,24 @@ def _call(kernel, table, hi2d, lo2d, interpret):
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "seed", "seg_len", "n_seg",
-                                             "alpha", "fp_seed", "interpret"))
+                                             "alpha", "fp_seed", "offset",
+                                             "interpret"))
 def xor_probe(table, hi2d, lo2d, *, mode: str, seed: int, seg_len: int,
-              n_seg: int, alpha: int, fp_seed: int, interpret: bool = True):
+              n_seg: int, alpha: int, fp_seed: int, offset: int = 0,
+              interpret: bool = True):
     k = functools.partial(_kernel, mode=mode, seed=seed, seg_len=seg_len,
-                          n_seg=n_seg, alpha=alpha, fp_seed=fp_seed)
+                          n_seg=n_seg, alpha=alpha, fp_seed=fp_seed,
+                          offset=offset)
     return _call(k, table, hi2d, lo2d, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "seed", "seg_len", "n_seg",
-                                             "strategy", "bit_seed", "interpret"))
+                                             "strategy", "bit_seed", "offset",
+                                             "interpret"))
 def exact_probe(table, hi2d, lo2d, *, mode: str, seed: int, seg_len: int,
-                n_seg: int, strategy: str, bit_seed: int, interpret: bool = True):
+                n_seg: int, strategy: str, bit_seed: int, offset: int = 0,
+                interpret: bool = True):
     k = functools.partial(_kernel_exact, mode=mode, seed=seed, seg_len=seg_len,
-                          n_seg=n_seg, strategy=strategy, bit_seed=bit_seed)
+                          n_seg=n_seg, strategy=strategy, bit_seed=bit_seed,
+                          offset=offset)
     return _call(k, table, hi2d, lo2d, interpret)

@@ -1,0 +1,235 @@
+"""Batched multi-filter probe engine: FilterBank + FilterService.
+
+Paper mapping
+-------------
+- **§5.2 (shared address / locality).** The paper speeds up the two-stage
+  ChainedFilter by making both stages' probes land in the same cache line.
+  Here the same idea is lifted one level: ``FilterBank.pack`` flattens N
+  heterogeneous filters (Bloom, Xor, ExactBloomier, ChainedFilterAnd,
+  ChainedFilterCascade) into ONE 128-word-aligned uint32 buffer plus static
+  layout descriptors (core.tables), so every fused kernel gathers from a
+  single VMEM-resident table and each (8, 128) key tile is loaded exactly
+  once per filter stack — never per layer.
+- **§5.3 (cascade probing).** ``ChainedFilterCascade`` queries are served by
+  the fused ``cascade_probe`` kernel: all Bloom layers and the
+  first-zero-layer parity rule evaluate in one kernel launch instead of one
+  device dispatch per layer. The kernel also reports the sequential probe
+  count min(first_zero, L) — the number of layer touches a short-circuiting
+  querier pays — which the service aggregates into its stats, mirroring the
+  paper's memory-access accounting (Tab. 3 / Fig. 10).
+- **§5.4 (LSM / tiered lookups).** ``TieredPrefixCache`` routes its
+  stage-1 tier filters through a FilterService bank (``lookup_batch``):
+  one batched probe decides which tiers fire for every key in the stream,
+  preserving the ≤ 1 wasted-probe invariant per lookup.
+
+Scale-out: key blocks are sharded across devices with ``shard_map`` over a
+1-D ``data`` mesh (CPU multi-device via ``--xla_force_host_platform_
+device_count`` in tests); the packed table buffer is replicated — filters
+are small by construction (§4) — and each device probes its own key rows.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bloom import BloomFilter
+from repro.core.bloomier import XorFilter, ExactBloomier
+from repro.core.chained import ChainedFilterAnd, ChainedFilterCascade
+from repro.core.tables import (BloomTable, XorTable, ExactTable,
+                               ChainedAndLayout, CascadeLayout, concat_tables)
+from repro.kernels import common
+from repro.kernels.bloom_probe import bloom_probe
+from repro.kernels.xor_probe import xor_probe, exact_probe
+from repro.kernels.chained_probe import chained_probe
+from repro.kernels.cascade_probe import cascade_probe
+from repro.kernels.ops import chained_and_params
+from repro.core import hashing as H
+
+_LAYOUT_TO_CLASS = {
+    BloomTable: BloomFilter,
+    XorTable: XorFilter,
+    ExactTable: ExactBloomier,
+    ChainedAndLayout: ChainedFilterAnd,
+    CascadeLayout: ChainedFilterCascade,
+}
+
+
+# ---------------------------------------------------------------------------
+# FilterBank — N heterogeneous filters in one packed buffer
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FilterBank:
+    tables: np.ndarray                  # uint32 [W], 128-word aligned
+    layouts: tuple                      # one FilterLayout per filter
+
+    @classmethod
+    def pack(cls, filters: list) -> "FilterBank":
+        tables, layouts = concat_tables([f.to_tables() for f in filters])
+        return cls(tables=tables, layouts=layouts)
+
+    def unpack(self) -> list:
+        """Reconstruct the filter objects (bit-identical query behaviour)."""
+        out = []
+        for lay in self.layouts:
+            klass = _LAYOUT_TO_CLASS[type(lay)]
+            out.append(klass.from_tables(self.tables, lay))
+        return out
+
+    @property
+    def n_filters(self) -> int:
+        return len(self.layouts)
+
+    @property
+    def nbytes(self) -> int:
+        return self.tables.nbytes
+
+
+# ---------------------------------------------------------------------------
+# fused per-layout dispatch (single jit, layouts static)
+# ---------------------------------------------------------------------------
+
+def _probe_one(tables, hi2d, lo2d, lay, interpret: bool):
+    """-> (member, probes) int32 [R, 128] for one filter layout."""
+    if isinstance(lay, BloomTable):
+        m = bloom_probe(tables, hi2d, lo2d, m_bits=lay.m_bits, k=lay.k,
+                        seed=lay.seed, offset=lay.offset, interpret=interpret)
+        return m, jnp.ones_like(m)
+    if isinstance(lay, XorTable):
+        m = xor_probe(tables, hi2d, lo2d, mode=lay.mode, seed=lay.seed,
+                      seg_len=lay.seg_len, n_seg=lay.n_seg, alpha=lay.alpha,
+                      fp_seed=lay.fp_seed, offset=lay.offset,
+                      interpret=interpret)
+        return m, jnp.ones_like(m)
+    if isinstance(lay, ExactTable):
+        m = exact_probe(tables, hi2d, lo2d, mode=lay.mode, seed=lay.seed,
+                        seg_len=lay.seg_len, n_seg=lay.n_seg,
+                        strategy=lay.strategy, bit_seed=lay.bit_seed,
+                        offset=lay.offset, interpret=interpret)
+        return m, jnp.ones_like(m)
+    if isinstance(lay, ChainedAndLayout):
+        return chained_probe(tables, hi2d, lo2d, interpret=interpret,
+                             **chained_and_params(lay))
+    if isinstance(lay, CascadeLayout):
+        return cascade_probe(tables, hi2d, lo2d, layers=lay.probe_params(),
+                             interpret=interpret)
+    raise TypeError(f"unknown filter layout {type(lay).__name__}")
+
+
+@functools.partial(jax.jit, static_argnames=("layouts", "interpret"))
+def bank_probe(tables, hi2d, lo2d, *, layouts: tuple, interpret: bool = True):
+    """Probe every filter in the bank on one key block.
+    -> (member, probes) int32 [F, R, 128]."""
+    members, probes = [], []
+    for lay in layouts:
+        m, p = _probe_one(tables, hi2d, lo2d, lay, interpret)
+        members.append(m)
+        probes.append(p)
+    return jnp.stack(members), jnp.stack(probes)
+
+
+# ---------------------------------------------------------------------------
+# FilterService — batched query streams, device-sharded
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServiceStats:
+    lookups: int = 0
+    hits: np.ndarray = None            # int64 [F]
+    probes: np.ndarray = None          # int64 [F] — sequential probe count
+
+    def as_dict(self) -> dict:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits.tolist(),
+            "hit_rate": [h / max(1, self.lookups) for h in self.hits],
+            "avg_probes": [p / max(1, self.lookups) for p in self.probes],
+        }
+
+
+class FilterService:
+    """Serve batched membership queries against a packed FilterBank.
+
+    ``probe(keys)`` evaluates every filter in the bank on the whole key
+    batch in one jitted dispatch; rows are sharded across the mesh's
+    ``data`` axis with shard_map (the table buffer is replicated)."""
+
+    def __init__(self, filters: list, *, mesh=None, interpret: bool = True):
+        self.bank = FilterBank.pack(filters)
+        self.interpret = interpret
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        self.mesh = mesh
+        self._tables = jnp.asarray(self.bank.tables)
+        n_dev = self.mesh.devices.size
+        self._row_multiple = common.BLOCK_ROWS * n_dev
+        layouts, interp = self.bank.layouts, interpret
+        self._probe_fn = jax.jit(shard_map(
+            lambda t, h, l: bank_probe(t, h, l, layouts=layouts,
+                                       interpret=interp),
+            mesh=self.mesh,
+            in_specs=(P(), P("data", None), P("data", None)),
+            out_specs=(P(None, "data", None), P(None, "data", None)),
+            check_rep=False,
+        ))
+        self.stats = ServiceStats(
+            hits=np.zeros(self.bank.n_filters, np.int64),
+            probes=np.zeros(self.bank.n_filters, np.int64))
+
+    # -- batched probing -----------------------------------------------------
+    def _block_keys(self, keys: np.ndarray):
+        hi, lo = H.np_split_u64(np.asarray(keys, dtype=np.uint64))
+        hi2d, lo2d, n = common.blockify(hi, lo)
+        pad_rows = (-hi2d.shape[0]) % self._row_multiple
+        if pad_rows:
+            z = np.zeros((pad_rows, common.BLOCK_COLS), np.uint32)
+            hi2d = np.concatenate([hi2d, z])
+            lo2d = np.concatenate([lo2d, z])
+        return jnp.asarray(hi2d), jnp.asarray(lo2d), n
+
+    def probe(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """-> (member bool [F, n], probes int [F, n]) for n keys across the
+        bank's F filters; updates hit/probe stats."""
+        if len(keys) == 0:
+            shape = (self.bank.n_filters, 0)
+            return np.zeros(shape, bool), np.zeros(shape, np.int32)
+        hi2d, lo2d, n = self._block_keys(keys)
+        member, probes = self._probe_fn(self._tables, hi2d, lo2d)
+        member = np.asarray(member).reshape(self.bank.n_filters, -1)[:, :n]
+        probes = np.asarray(probes).reshape(self.bank.n_filters, -1)[:, :n]
+        member = member.astype(bool)
+        self.stats.lookups += n
+        self.stats.hits += member.sum(axis=1)
+        self.stats.probes += probes.sum(axis=1)
+        return member, probes
+
+    def probe_filter(self, index: int, keys: np.ndarray) -> np.ndarray:
+        """Membership for ONE filter of the bank -> bool [n]. Dispatches only
+        that filter's kernel and leaves the aggregate stats untouched."""
+        if len(keys) == 0:
+            return np.zeros(0, bool)
+        hi2d, lo2d, n = self._block_keys(keys)
+        member, _ = bank_probe(self._tables, hi2d, lo2d,
+                               layouts=(self.bank.layouts[index],),
+                               interpret=self.interpret)
+        return np.asarray(member).reshape(-1)[:n].astype(bool)
+
+    def refresh_tables(self, filters: list) -> None:
+        """Re-pack mutated filter contents into the existing bank. Valid only
+        while every filter's layout (sizes, seeds, offsets) is unchanged —
+        e.g. Bloom bit-flips from inserts — so the jitted probe function and
+        its compilation cache survive."""
+        bank = FilterBank.pack(filters)
+        if bank.layouts != self.bank.layouts:
+            raise ValueError("filter layouts changed; build a new FilterService")
+        self.bank = bank
+        self._tables = jnp.asarray(bank.tables)
+
+    def unpack(self) -> list:
+        return self.bank.unpack()

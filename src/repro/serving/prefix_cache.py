@@ -76,7 +76,12 @@ class TieredPrefixCache:
         self.probes = 0            # actual tier probes paid
         self.wasted_probes = 0     # probes that found nothing
         self.lookups = 0
+        self.batched_lookups = 0
         self.probe_cost_paid_us = 0.0
+        # batched stage-1 probing through a packed FilterBank (§5.2):
+        # rebuilt lazily whenever a tier filter mutates.
+        self._service = None
+        self._service_dirty = True
 
     # ------------------------------------------------------------- insert
     def insert(self, key: int, payload, tier: int = 0) -> None:
@@ -86,6 +91,7 @@ class TieredPrefixCache:
     def _insert_at(self, key: np.uint64, payload, ti: int) -> None:
         if ti >= len(self.specs):
             return                                    # dropped off the end
+        self._service_dirty = True
         spec = self.specs[ti]
         if len(self.store[ti]) >= spec.capacity:
             victim = self.lru[ti].pop(0)
@@ -110,6 +116,9 @@ class TieredPrefixCache:
         key = np.uint64(key)
         self.lookups += 1
         fired = [i for i, f in enumerate(self.filters) if f.query(key)]
+        return self._probe_fired(key, fired)
+
+    def _probe_fired(self, key: np.uint64, fired: list[int]):
         for ti in fired:
             self.probes += 1
             self.probe_cost_paid_us += self.specs[ti].probe_cost_us
@@ -121,6 +130,41 @@ class TieredPrefixCache:
             break                       # §5.4: later hits are false too
         return None, None
 
+    # ------------------------------------------------- batched lookup (§5.2)
+    def _refresh_service(self):
+        if self._service is None or self._service_dirty:
+            from .filter_service import FilterService
+            blooms = [f.bloom for f in self.filters]
+            if self._service is None:
+                self._service = FilterService(blooms)
+            else:
+                # inserts only flip bits — layouts are invariant, so re-pack
+                # tables in place and keep the jitted probe function warm
+                self._service.refresh_tables(blooms)
+            self._service_dirty = False
+        return self._service
+
+    def lookup_batch(self, keys: list[int]) -> list[tuple]:
+        """Batched lookup for a stream of keys: ONE fused probe over the
+        packed bank of tier stage-1 Bloom filters decides candidate tiers
+        for every key; the exact stage-2 whitelist and the in-order store
+        probing (same ≤ 1 wasted-probe accounting as ``lookup``) stay
+        host-side. Returns [(payload | None, tier | None)] per key."""
+        if not keys:
+            return []
+        service = self._refresh_service()
+        arr = np.array([np.uint64(k) for k in keys], dtype=np.uint64)
+        stage1, _ = service.probe(arr)          # bool [n_tiers, n]
+        results = []
+        for j, key in enumerate(arr):
+            self.lookups += 1
+            fired = [i for i in range(len(self.filters))
+                     if stage1[i, j]
+                     and bool(self.filters[i].exact.query(arr[j:j + 1])[0])]
+            results.append(self._probe_fired(key, fired))
+        self.batched_lookups += len(arr)
+        return results
+
     # ---------------------------------------------------------- accounting
     @property
     def filter_bits(self) -> int:
@@ -129,6 +173,7 @@ class TieredPrefixCache:
     def stats(self) -> dict:
         return {"lookups": self.lookups, "probes": self.probes,
                 "wasted_probes": self.wasted_probes,
+                "batched_lookups": self.batched_lookups,
                 "avg_probe_cost_us": (self.probe_cost_paid_us
                                       / max(1, self.lookups)),
                 "filter_KiB": self.filter_bits / 8 / 1024}

@@ -1,0 +1,114 @@
+"""Minimal stand-in for `hypothesis` when the real package is unavailable.
+
+The CI environment installs real hypothesis (requirements-dev.txt); this
+container image does not ship it and nothing may be pip-installed here, so
+conftest.py registers this module under ``sys.modules['hypothesis']`` as a
+fallback. It implements just the surface the test-suite uses — ``given``,
+``settings`` and the ``integers`` / ``floats`` / ``lists`` / ``sampled_from``
+strategies — drawing deterministic pseudo-random examples (seeded per test
+name) with the all-minimum and all-maximum boundary examples first.
+
+It is NOT a property-testing engine: no shrinking, no example database.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw_min, draw_max, draw_rand):
+        self._min = draw_min
+        self._max = draw_max
+        self._rand = draw_rand
+
+    def example(self, rng: random.Random, which: str):
+        if which == "min":
+            return self._min(rng)
+        if which == "max":
+            return self._max(rng)
+        return self._rand(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: min_value, lambda r: max_value,
+                     lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: min_value, lambda r: max_value,
+                     lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda r: seq[0], lambda r: seq[-1],
+                     lambda r: r.choice(seq))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10
+          ) -> _Strategy:
+    return _Strategy(
+        lambda r: [elements.example(r, "min") for _ in range(max(min_size, 1))],
+        lambda r: [elements.example(r, "max") for _ in range(max_size)],
+        lambda r: [elements.example(r, "rand")
+                   for _ in range(r.randint(min_size, max_size))])
+
+
+def settings(max_examples: int = 25, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        conf = getattr(fn, "_fallback_settings", {"max_examples": 25})
+
+        # NOTE: no functools.wraps — the wrapper must expose a ZERO-arg
+        # signature or pytest would resolve the drawn parameters as fixtures.
+        def wrapper():
+            rng = random.Random(f"fallback:{fn.__module__}.{fn.__qualname__}")
+            n = conf["max_examples"]
+            for i in range(n):
+                which = "min" if i == 0 else ("max" if i == 1 else "rand")
+                drawn = [s.example(rng, which) for s in strategies]
+                try:
+                    fn(*drawn)
+                except _Unsatisfied:
+                    continue
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        return wrapper
+    return deco
+
+
+def assume(condition: bool) -> bool:
+    # Real hypothesis aborts the example; here examples are unconditional,
+    # so a failed assumption just skips the remaining assertions.
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def build_modules() -> tuple[types.ModuleType, types.ModuleType]:
+    """(hypothesis, hypothesis.strategies) module objects for sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.__version__ = "0.0-fallback"
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.lists = lists
+    st.sampled_from = sampled_from
+    hyp.strategies = st
+    return hyp, st

@@ -21,7 +21,8 @@ def _lanes2d(keys):
 
 
 # --------------------------------------------------------------------- bloom
-@pytest.mark.parametrize("n_keys", [1, 7, 1024, 4096, 5000])
+@pytest.mark.slow          # 20-point shape sweep; the fpr sweep below keeps
+@pytest.mark.parametrize("n_keys", [1, 7, 1024, 4096, 5000])   # fast coverage
 @pytest.mark.parametrize("n_queries", [1, 127, 1024, 2049])
 def test_bloom_kernel_matches_oracle(n_keys, n_queries):
     f = BloomFilter.build(KEYS[:n_keys], 0.02, seed=n_keys % 31)

@@ -9,6 +9,9 @@ import jax.numpy as jnp
 from repro.configs import REGISTRY, input_specs, applicable_shapes, get_arch
 from repro.models.common import init_from_specs
 
+# Full per-arch smoke matrix takes ~2 min on CPU — nightly lane only.
+pytestmark = pytest.mark.slow
+
 
 def _mk_batch(specs, rng, vocab_cap=8):
     out = {}

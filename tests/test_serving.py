@@ -59,6 +59,7 @@ def test_prefix_cache_filter_small():
     assert s["filter_KiB"] < 64
 
 
+@pytest.mark.slow
 def test_engine_prefix_reuse_and_greedy_equivalence():
     arch = get_arch("llama3.2-1b")
     m = arch.model(smoke=True)
