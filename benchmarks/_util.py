@@ -27,6 +27,34 @@ def mops(n_ops: int, seconds: float) -> float:
     return n_ops / max(seconds, 1e-12) / 1e6
 
 
+def build_lsm_store(kind: str, keys: np.ndarray, per: int, n_tables: int,
+                    bits_per_key: float = 0.0, seed: int = 1,
+                    val_shift: int = 0):
+    """Shared LSM-bench fixture: ``n_tables`` explicit flushes of ``per``
+    keys each (payload = key >> val_shift), compaction off so the Fig-12
+    grid sees exactly N equal tables."""
+    from repro.storage import LsmStore
+    store = LsmStore(filter_kind=kind, bits_per_key=bits_per_key, seed=seed,
+                     memtable_capacity=2 ** 62, auto_compact=False)
+    for i in range(n_tables):
+        ks = keys[i * per:(i + 1) * per]
+        store.put_batch(ks, ks >> np.uint64(val_shift))
+        store.flush()
+    return store
+
+
+def host_crosscheck(store, sample: np.ndarray, seed: int = 1) -> bool:
+    """True iff the batched fused-kernel path and the host discrete-event
+    model (over the store's OWN tables/filters) agree bit-for-bit on
+    (found, reads) for every sampled key."""
+    from repro.core.lsm import LsmLevelChained
+    lvl = LsmLevelChained.from_parts(store.sstables, store.filters, seed=seed)
+    got_found, _, got_reads = store.get_batch(sample)
+    ref = [lvl.point_query(int(k)) for k in sample]
+    return bool((got_found == np.array([r[0] for r in ref])).all()
+                and (got_reads == np.array([r[1] for r in ref])).all())
+
+
 def render_table(title: str, headers: list, rows: list) -> str:
     widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
               else len(str(h)) for i, h in enumerate(headers)]

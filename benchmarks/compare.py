@@ -1,0 +1,98 @@
+"""Benchmark regression gate: BENCH_results.json vs BENCH_baseline.json.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        [--results BENCH_results.json] [--baseline BENCH_baseline.json] \
+        [--tolerance 0.25]
+
+Each gated metric may regress at most ``tolerance`` (fractional) against
+the committed baseline: higher-is-better metrics fail below
+``(1 - tol) * baseline``, lower-is-better metrics fail above
+``(1 + tol) * baseline``. Metrics missing from the baseline (newly added
+benchmarks) WARN and pass, so adding a metric never blocks the PR that
+introduces it; metrics missing from the results FAIL (a silently dropped
+benchmark is a regression). Exit code 1 on any failure — wired into the
+nightly CI lane after ``benchmarks.run``.
+
+Refresh the baseline intentionally, never implicitly:
+    PYTHONPATH=src python -m benchmarks.run && cp BENCH_results.json BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (bench name, metric key, direction) — direction 'higher' | 'lower'
+GATES = [
+    ("filter_service (fused cascade vs per-layer)",
+     "fused_speedup_vs_per_layer", "higher"),
+    ("lsm_store (batched storage engine)",
+     "fused_probe_speedup", "higher"),
+    ("lsm_store (batched storage engine)",
+     "p99_us_chained_miss", "lower"),
+]
+
+
+def _lookup(results: dict, bench: str, key: str):
+    entry = results.get(bench)
+    if not entry or not entry.get("ok", False):
+        return None
+    return entry.get("metrics", {}).get(key)
+
+
+def compare(results: dict, baseline: dict, tolerance: float) -> int:
+    failures = 0
+    print(f"benchmark gate (tolerance {tolerance:.0%}):")
+    for bench, key, direction in GATES:
+        got = _lookup(results, bench, key)
+        base = _lookup(baseline, bench, key)
+        name = f"{bench} :: {key}"
+        if got is None:
+            print(f"  FAIL  {name}: missing from results")
+            failures += 1
+            continue
+        if base is None:
+            print(f"  WARN  {name}: no baseline (got {got:.3f}) — skipped")
+            continue
+        if direction == "higher":
+            ok = got >= (1.0 - tolerance) * base
+            bound = f">= {(1.0 - tolerance) * base:.3f}"
+        else:
+            ok = got <= (1.0 + tolerance) * base
+            bound = f"<= {(1.0 + tolerance) * base:.3f}"
+        status = "ok" if ok else "FAIL"
+        print(f"  {status:4s}  {name}: {got:.3f} (baseline {base:.3f}, "
+              f"need {bound})")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default="BENCH_results.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    args = ap.parse_args(argv)
+    try:
+        with open(args.results) as fh:
+            results = json.load(fh)
+    except OSError as e:
+        print(f"cannot read results: {e}")
+        return 1
+    try:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+    except OSError as e:
+        print(f"cannot read baseline: {e} — all gates WARN")
+        baseline = {}
+    failures = compare(results, baseline, args.tolerance)
+    if failures:
+        print(f"{failures} gated metric(s) regressed > "
+              f"{args.tolerance:.0%} vs {args.baseline}")
+    else:
+        print("all gated metrics within tolerance")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,22 +21,101 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .bloom import BloomFilter
-from .chained import ChainedFilterAnd
 from .othello import DynamicExactFilter
 from .bloomier import XorFilter
 
 
 @dataclass
 class SSTable:
-    keys: np.ndarray                      # sorted uint64
-    key_set: set = field(repr=False, default=None)
+    """Immutable sorted run. Membership is binary search on the sorted key
+    array (no Python-set mirror); ``vals`` optionally carries the payloads
+    aligned with ``keys`` (the storage engine's read path)."""
 
-    def __post_init__(self):
-        if self.key_set is None:
-            self.key_set = set(self.keys.tolist())
+    keys: np.ndarray                      # sorted uint64
+    vals: np.ndarray | None = field(repr=False, default=None)
 
     def contains(self, key: int) -> bool:
-        return key in self.key_set
+        i = int(np.searchsorted(self.keys, np.uint64(key)))
+        return i < len(self.keys) and self.keys[i] == np.uint64(key)
+
+    def contains_many(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized membership -> bool [n] (batched read path)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        idx = np.searchsorted(self.keys, keys)
+        idx_c = np.minimum(idx, max(len(self.keys) - 1, 0))
+        if len(self.keys) == 0:
+            return np.zeros(len(keys), dtype=bool)
+        return self.keys[idx_c] == keys
+
+    def get_many(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(contained bool [n], values uint64 [n]) — values are 0 where the
+        key is absent or the table carries no payloads."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        out = np.zeros(len(keys), dtype=np.uint64)
+        if len(self.keys) == 0:
+            return np.zeros(len(keys), dtype=bool), out
+        idx = np.searchsorted(self.keys, keys)
+        idx_c = np.minimum(idx, len(self.keys) - 1)
+        hit = self.keys[idx_c] == keys
+        if self.vals is not None:
+            out[hit] = self.vals[idx_c[hit]]
+        return hit, out
+
+
+@dataclass
+class ChainedTableFilter:
+    """One SSTable's two-stage ChainedFilter (§5.4.3): stage-1 approximate
+    XorFilter over the table's keys, stage-2 *dynamic* exact Othello filter
+    (positives = own keys, negatives = stage-1 false positives among the rest
+    of the level), so newly flushed tables can be excluded online."""
+
+    f1: XorFilter
+    f2: DynamicExactFilter
+
+    @classmethod
+    def build(cls, keys: np.ndarray, other_keys: np.ndarray,
+              fp_alpha: int = 7, seed1: int = 0, seed2: int = 0
+              ) -> "ChainedTableFilter":
+        """``other_keys``: the rest of the level's key universe at build time
+        (older tables on flush; every other table on compaction)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        other = np.asarray(other_keys, dtype=np.uint64)
+        f1 = XorFilter.build(keys, fp_alpha, seed=seed1)
+        other = other[~np.isin(other, keys)]
+        fp = other[f1.query(other)] if len(other) else other
+        f2 = DynamicExactFilter.build(keys, fp, seed=seed2)
+        return cls(f1=f1, f2=f2)
+
+    def exclude_new(self, own_keys: np.ndarray, new_keys: np.ndarray) -> None:
+        """RocksDB-style online exclusion: ``new_keys`` just entered the
+        level; whitelist-out the ones that stage-1 false-positives (unless
+        they are also this table's own keys)."""
+        new_keys = np.asarray(new_keys, dtype=np.uint64)
+        fp_keys = new_keys[self.f1.query(new_keys)]
+        fp_keys = fp_keys[~np.isin(fp_keys, own_keys)]
+        if len(fp_keys):
+            self.f2.exclude(fp_keys)
+
+    def query(self, keys: np.ndarray) -> np.ndarray:
+        return self.f1.query(keys) & self.f2.query(keys)
+
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        from .tables import LsmChainLayout, concat_tables
+        tables, (xor_lay, oth_lay) = concat_tables(
+            [self.f1.to_tables(), self.f2.to_tables()])
+        return tables, LsmChainLayout(xor=xor_lay, oth=oth_lay,
+                                      n_keys=self.f1.tbl.n_keys)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "ChainedTableFilter":
+        """Query-only reconstruction (stage-2 Othello loses its adjacency)."""
+        return cls(f1=XorFilter.from_tables(tables, layout.xor),
+                   f2=DynamicExactFilter.from_tables(tables, layout.oth))
+
+    @property
+    def bits(self) -> int:
+        return self.f1.bits + self.f2.bits
 
 
 class LsmLevelChained:
@@ -46,10 +125,34 @@ class LsmLevelChained:
 
     def __init__(self, fp_alpha: int = 7, seed: int = 0):
         self.tables: list[SSTable] = []
-        self.stage1: list[XorFilter] = []
-        self.stage2: list[DynamicExactFilter] = []
+        self.filters: list[ChainedTableFilter] = []
         self.fp_alpha = fp_alpha
         self.seed = seed
+
+    # seed derivations are shared with repro.storage.LsmStore so that a store
+    # fed the same flush sequence builds bit-identical filters (the property
+    # tests' parity contract).
+    def _seeds(self, flush_idx: int) -> tuple[int, int]:
+        return self.seed + 31 * flush_idx, self.seed + 7 * flush_idx
+
+    @classmethod
+    def from_parts(cls, tables: list[SSTable],
+                   filters: list[ChainedTableFilter], fp_alpha: int = 7,
+                   seed: int = 0) -> "LsmLevelChained":
+        """Wrap existing (newest-first) tables + filters — e.g. a batched
+        LsmStore's state — as a host-side reference model."""
+        lvl = cls(fp_alpha=fp_alpha, seed=seed)
+        lvl.tables = list(tables)
+        lvl.filters = list(filters)
+        return lvl
+
+    @property
+    def stage1(self) -> list[XorFilter]:
+        return [f.f1 for f in self.filters]
+
+    @property
+    def stage2(self) -> list[DynamicExactFilter]:
+        return [f.f2 for f in self.filters]
 
     def flush(self, keys: np.ndarray) -> None:
         """Add a NEW newest SSTable. Mirrors RocksDB: for each key of the new
@@ -59,30 +162,23 @@ class LsmLevelChained:
         new_idx = len(self.tables)
         # exclude this table's keys from every older table's filter
         for i in range(new_idx):
-            older = self.tables[i]
-            mask = self.stage1[i].query(keys)
-            fp_keys = keys[mask]
-            fp_keys = fp_keys[~np.isin(fp_keys, older.keys)]
-            if len(fp_keys):
-                self.stage2[i].exclude(fp_keys)
-        f1 = XorFilter.build(keys, self.fp_alpha, seed=self.seed + 31 * new_idx)
+            self.filters[i].exclude_new(self.tables[i].keys, keys)
         # stage-2 starts with the table's own keys as positives and the
         # *current* false positives of stage-1 among older tables' keys
         older_keys = (np.concatenate([t.keys for t in self.tables])
                       if self.tables else np.empty(0, np.uint64))
-        older_keys = older_keys[~np.isin(older_keys, keys)]
-        fp = older_keys[f1.query(older_keys)] if len(older_keys) else older_keys
-        f2 = DynamicExactFilter.build(keys, fp, seed=self.seed + 7 * new_idx)
+        s1, s2 = self._seeds(new_idx)
+        f = ChainedTableFilter.build(keys, older_keys, fp_alpha=self.fp_alpha,
+                                     seed1=s1, seed2=s2)
         # newest-first ordering
         self.tables.insert(0, SSTable(keys))
-        self.stage1.insert(0, f1)
-        self.stage2.insert(0, f2)
+        self.filters.insert(0, f)
 
     def _filter_hits(self, key: int) -> list[int]:
         hits = []
         k = np.array([key], dtype=np.uint64)
         for i in range(len(self.tables)):
-            if bool(self.stage1[i].query(k)[0]) and bool(self.stage2[i].query(k)[0]):
+            if bool(self.filters[i].query(k)[0]):
                 hits.append(i)
         return hits
 

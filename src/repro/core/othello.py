@@ -19,6 +19,23 @@ import jax.numpy as jnp
 from . import hashing as H
 
 
+def pack_bitmap(bits: np.ndarray) -> np.ndarray:
+    """uint8 0/1 array [m] -> uint32 words [⌈m/32⌉], LSB-first (bit j of
+    word i is element 32·i+j) — the layout every probe kernel reads."""
+    bits = np.asarray(bits, dtype=np.uint32) & 1
+    words = np.zeros((len(bits) + 31) // 32, dtype=np.uint32)
+    idx = np.arange(len(bits))
+    np.bitwise_or.at(words, idx >> 5, bits << (idx & 31).astype(np.uint32))
+    return words
+
+
+def unpack_bitmap(words: np.ndarray, m: int) -> np.ndarray:
+    """Inverse of :func:`pack_bitmap` -> uint8 0/1 array [m]."""
+    idx = np.arange(m)
+    w = np.asarray(words, dtype=np.uint32)[idx >> 5]
+    return ((w >> (idx & 31).astype(np.uint32)) & 1).astype(np.uint8)
+
+
 @dataclass
 class Othello:
     ma: int
@@ -156,6 +173,26 @@ class Othello:
         v = H.jx_hash_to_range(hi, lo, self.seed * 3 + 2, self.mb)
         return (a[u] ^ b[v]).astype(bool)
 
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        """(uint32 tables, OthelloTable layout). Bitmaps A then B, LSB-first."""
+        from .tables import OthelloTable, pad_words
+        tables = pad_words(np.concatenate([pack_bitmap(self.bits_a),
+                                           pack_bitmap(self.bits_b)]))
+        return tables, OthelloTable(offset=0, width=len(tables), ma=self.ma,
+                                    mb=self.mb, seed=self.seed)
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "Othello":
+        """Query-only reconstruction: lookups are bit-identical, but the
+        edge adjacency is gone, so insert()/exclude() must not be called."""
+        wa = (layout.ma + 31) // 32
+        wb = (layout.mb + 31) // 32
+        a = unpack_bitmap(tables[layout.offset:layout.offset + wa], layout.ma)
+        b = unpack_bitmap(tables[layout.offset_b:layout.offset_b + wb], layout.mb)
+        return cls(ma=layout.ma, mb=layout.mb, seed=layout.seed,
+                   bits_a=a, bits_b=b)
+
     @property
     def bits(self) -> int:
         return self.ma + self.mb
@@ -196,6 +233,15 @@ class DynamicExactFilter:
 
     def query_jax(self, hi, lo):
         return self.oth.lookup_jax(hi, lo)
+
+    # -- packed-table interchange (FilterBank, §5.2) -------------------------
+    def to_tables(self):
+        return self.oth.to_tables()
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, layout) -> "DynamicExactFilter":
+        """Query-only reconstruction (see Othello.from_tables)."""
+        return cls(oth=Othello.from_tables(tables, layout))
 
     @property
     def bits(self) -> int:

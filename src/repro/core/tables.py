@@ -82,6 +82,24 @@ class ExactTable:
         return dataclasses.replace(self, offset=self.offset + delta)
 
 
+@dataclass(frozen=True)
+class OthelloTable:
+    """Othello 1-bit classifier: bitmaps A and B packed LSB-first into one
+    uint32 run (A's ⌈ma/32⌉ words, then B's ⌈mb/32⌉ words) at ``offset``."""
+    offset: int
+    width: int
+    ma: int
+    mb: int
+    seed: int
+
+    @property
+    def offset_b(self) -> int:
+        return self.offset + (self.ma + 31) // 32
+
+    def shift(self, delta: int) -> "OthelloTable":
+        return dataclasses.replace(self, offset=self.offset + delta)
+
+
 # ---------------------------------------------------------------------------
 # composite descriptors — filter stacks over several leaf tables
 # ---------------------------------------------------------------------------
@@ -128,7 +146,37 @@ class CascadeLayout:
         return tuple((t.m_bits, t.k, t.seed, t.offset) for t in self.layers)
 
 
-FilterLayout = BloomTable | XorTable | ExactTable | ChainedAndLayout | CascadeLayout
+@dataclass(frozen=True)
+class LsmChainLayout:
+    """Per-SSTable ChainedFilter of the LSM store (§5.4): stage-1 XorTable
+    (approximate, α-bit fingerprints) ∧ stage-2 OthelloTable (dynamic exact
+    over positives ∪ stage-1 false positives)."""
+    xor: XorTable | None
+    oth: OthelloTable
+    n_keys: int
+
+    def shift(self, delta: int) -> "LsmChainLayout":
+        return dataclasses.replace(
+            self,
+            xor=None if self.xor is None else self.xor.shift(delta),
+            oth=self.oth.shift(delta))
+
+    @property
+    def width(self) -> int:
+        return (0 if self.xor is None else self.xor.width) + self.oth.width
+
+    def probe_params(self) -> tuple:
+        """Static tagged chain descriptor for the fused ``lsm_probe`` kernel:
+        ('chain', xor_params | None, othello_params)."""
+        x = self.xor
+        xp = (None if x is None else
+              (x.mode, x.seed, x.seg_len, x.n_seg, x.alpha, x.fp_seed, x.offset))
+        o = self.oth
+        return ("chain", xp, (o.ma, o.mb, o.seed, o.offset, o.offset_b))
+
+
+FilterLayout = (BloomTable | XorTable | ExactTable | OthelloTable
+                | ChainedAndLayout | CascadeLayout | LsmChainLayout)
 
 
 def concat_tables(parts: list[tuple[np.ndarray, FilterLayout]]

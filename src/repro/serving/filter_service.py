@@ -41,13 +41,17 @@ from jax.sharding import PartitionSpec as P
 from repro.core.bloom import BloomFilter
 from repro.core.bloomier import XorFilter, ExactBloomier
 from repro.core.chained import ChainedFilterAnd, ChainedFilterCascade
-from repro.core.tables import (BloomTable, XorTable, ExactTable,
-                               ChainedAndLayout, CascadeLayout, concat_tables)
+from repro.core.lsm import ChainedTableFilter
+from repro.core.othello import DynamicExactFilter
+from repro.core.tables import (BloomTable, XorTable, ExactTable, OthelloTable,
+                               ChainedAndLayout, CascadeLayout, LsmChainLayout,
+                               concat_tables)
 from repro.kernels import common
 from repro.kernels.bloom_probe import bloom_probe
 from repro.kernels.xor_probe import xor_probe, exact_probe
 from repro.kernels.chained_probe import chained_probe
 from repro.kernels.cascade_probe import cascade_probe
+from repro.kernels.lsm_probe import lsm_chain_probe, othello_hit
 from repro.kernels.ops import chained_and_params
 from repro.core import hashing as H
 
@@ -55,8 +59,10 @@ _LAYOUT_TO_CLASS = {
     BloomTable: BloomFilter,
     XorTable: XorFilter,
     ExactTable: ExactBloomier,
+    OthelloTable: DynamicExactFilter,
     ChainedAndLayout: ChainedFilterAnd,
     CascadeLayout: ChainedFilterCascade,
+    LsmChainLayout: ChainedTableFilter,
 }
 
 
@@ -113,6 +119,14 @@ def _probe_one(tables, hi2d, lo2d, lay, interpret: bool):
                         strategy=lay.strategy, bit_seed=lay.bit_seed,
                         offset=lay.offset, interpret=interpret)
         return m, jnp.ones_like(m)
+    if isinstance(lay, OthelloTable):
+        m = othello_hit(tables, hi2d, lo2d, ma=lay.ma, mb=lay.mb,
+                        seed=lay.seed, offset_a=lay.offset,
+                        offset_b=lay.offset_b).astype(jnp.int32)
+        return m, jnp.ones_like(m)
+    if isinstance(lay, LsmChainLayout):
+        return lsm_chain_probe(tables, hi2d, lo2d,
+                               chain=lay.probe_params(), interpret=interpret)
     if isinstance(lay, ChainedAndLayout):
         return chained_probe(tables, hi2d, lo2d, interpret=interpret,
                              **chained_and_params(lay))
@@ -161,15 +175,17 @@ class FilterService:
     ``data`` axis with shard_map (the table buffer is replicated)."""
 
     def __init__(self, filters: list, *, mesh=None, interpret: bool = True):
-        self.bank = FilterBank.pack(filters)
         self.interpret = interpret
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
         self.mesh = mesh
+        self._row_multiple = common.BLOCK_ROWS * self.mesh.devices.size
+        self._setup(filters)
+
+    def _setup(self, filters: list) -> None:
+        self.bank = FilterBank.pack(filters)
         self._tables = jnp.asarray(self.bank.tables)
-        n_dev = self.mesh.devices.size
-        self._row_multiple = common.BLOCK_ROWS * n_dev
-        layouts, interp = self.bank.layouts, interpret
+        layouts, interp = self.bank.layouts, self.interpret
         self._probe_fn = jax.jit(shard_map(
             lambda t, h, l: bank_probe(t, h, l, layouts=layouts,
                                        interpret=interp),
@@ -223,13 +239,21 @@ class FilterService:
     def refresh_tables(self, filters: list) -> None:
         """Re-pack mutated filter contents into the existing bank. Valid only
         while every filter's layout (sizes, seeds, offsets) is unchanged —
-        e.g. Bloom bit-flips from inserts — so the jitted probe function and
-        its compilation cache survive."""
+        e.g. Bloom bit-flips from inserts or Othello exclusions that did not
+        resize — so the jitted probe function and its compilation cache
+        survive."""
         bank = FilterBank.pack(filters)
         if bank.layouts != self.bank.layouts:
             raise ValueError("filter layouts changed; build a new FilterService")
         self.bank = bank
         self._tables = jnp.asarray(bank.tables)
+
+    def rebuild(self, filters: list) -> None:
+        """Structural refresh (filters added/removed/resized): re-pack and
+        re-jit the probe function, keeping the mesh. Stats reset — the caller
+        owns cross-generation accounting. Prefer ``refresh_tables`` when the
+        layouts are unchanged (it keeps the compilation cache)."""
+        self._setup(filters)
 
     def unpack(self) -> list:
         return self.bank.unpack()

@@ -1,0 +1,375 @@
+"""Batched LSM storage engine with fused filter-guarded point queries (§5.4).
+
+The paper's headline systems result: ChainedFilter-guarded LSM point
+queries pay ≤ 1 wasted SSTable read per query (Fig 11b), cutting P99 tail
+latency vs Bloom filters at equal space (Fig 12). ``core.lsm`` models one
+level per-key on the host; this module is the serving-scale engine on top
+of the PR-1 probe stack:
+
+- **Write path.** ``put_batch`` fills a memtable; ``flush`` freezes it into
+  the newest immutable ``SSTable`` and builds that table's two-stage
+  ChainedFilter (stage-1 Xor, stage-2 dynamic Othello —
+  ``core.lsm.ChainedTableFilter``, the same construction and seed schedule
+  as ``LsmLevelChained``, so a store and the host model fed the same flush
+  sequence are bit-identical). Older tables' filters exclude the new keys
+  online (§5.4.3). Size-tiered compaction merges age-adjacent runs of
+  similar size and rebuilds ONLY the merged table's filter, with negatives
+  drawn from every other table so per-table exactness over the store's key
+  universe survives.
+
+- **Read path.** Every flush/compaction refreshes a ``FilterBank`` through
+  the store's ``FilterService`` — in place (``refresh_tables``) when only
+  filter *contents* changed, re-jitted (``rebuild``) on structural change —
+  so all tables' filters live in one packed 128-word-aligned uint32 buffer.
+  ``get_batch`` probes ALL SSTable filters for the whole key batch in one
+  fused ``lsm_probe`` launch (vs one dispatch per table), then resolves the
+  newest-first first-hit per key with one vectorized ``searchsorted`` read:
+  found ⇒ 1 read, miss-but-fired ⇒ exactly 1 wasted read, else 0.
+
+Per-table Bloom (``filter_kind='bloom'``) and filterless
+(``filter_kind='none'``) baselines share the same probe kernel and batched
+read path via the kernel's ``hits_mask`` output — they just read every
+fired table until the key turns up, which is precisely the tail the chain
+rule removes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+from repro.core.bloom import BloomFilter
+from repro.core.lsm import SSTable, ChainedTableFilter
+from repro.core.tables import TABLE_ALIGN, BloomTable, LsmChainLayout
+from repro.kernels import common
+from repro.kernels.lsm_probe import MAX_TABLES, lsm_probe
+from repro.serving.filter_service import FilterService
+
+FILTER_KINDS = ("chained", "bloom", "none")
+
+
+def _chain_descriptor(layout) -> tuple:
+    """Static per-table descriptor for ``lsm_probe`` from a bank layout."""
+    if isinstance(layout, LsmChainLayout):
+        return layout.probe_params()
+    if isinstance(layout, BloomTable):
+        return ("bloom", (layout.m_bits, layout.k, layout.seed, layout.offset))
+    raise TypeError(f"no lsm_probe descriptor for {type(layout).__name__}")
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    gets: int = 0
+    flushes: int = 0
+    compactions: int = 0
+    memtable_hits: int = 0
+    probed: int = 0                  # keys that reached the filter bank
+    sstable_reads: int = 0
+    wasted_reads: int = 0            # reads that found nothing
+
+    def as_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["avg_reads_per_get"] = self.sstable_reads / max(1, self.gets)
+        return d
+
+
+@dataclass
+class LsmStore:
+    """Point-query LSM store: memtable + newest-first immutable SSTables,
+    batched filter-guarded reads through one fused kernel launch."""
+
+    filter_kind: str = "chained"
+    memtable_capacity: int = 4096
+    fp_alpha: int = 7                 # chained: stage-1 fingerprint bits
+    bits_per_key: float = 10.0        # bloom baseline space budget
+    seed: int = 0
+    compact_min_run: int = 4          # size-tiered: merge runs >= this long
+    compact_size_ratio: float = 4.0   # ... of tables within this size ratio
+    auto_compact: bool = True
+    interpret: bool = True
+    mesh: object = None
+
+    memtable: dict = field(default_factory=dict, repr=False)
+    sstables: list = field(default_factory=list, repr=False)   # newest first
+    filters: list = field(default_factory=list, repr=False)    # parallel
+    service: FilterService | None = field(default=None, repr=False)
+    stats: StoreStats = field(default_factory=StoreStats, repr=False)
+
+    def __post_init__(self):
+        if self.filter_kind not in FILTER_KINDS:
+            raise ValueError(f"filter_kind must be one of {FILTER_KINDS}")
+        self._flush_count = 0
+        self._compact_count = 0
+        self._chains: tuple = ()
+        self._tables_dev = jnp.zeros(TABLE_ALIGN, dtype=jnp.uint32)
+        self._mem_keys: np.ndarray | None = None   # sorted memtable key cache
+
+    # ------------------------------------------------------------- write path
+    def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None
+                  ) -> None:
+        """Upsert a key batch (newest write wins). Auto-flushes whenever the
+        memtable reaches capacity."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = (np.zeros(len(keys), dtype=np.uint64) if values is None
+                  else np.asarray(values, dtype=np.uint64))
+        if len(keys) != len(values):
+            raise ValueError("keys/values length mismatch")
+        self.memtable.update(zip(keys.tolist(), values.tolist()))
+        self._mem_keys = None
+        self.stats.puts += len(keys)
+        if len(self.memtable) >= self.memtable_capacity:
+            self.flush()
+
+    def put(self, key: int, value: int = 0) -> None:
+        self.put_batch(np.array([key], np.uint64), np.array([value], np.uint64))
+
+    # seed schedule shared with LsmLevelChained._seeds → bit-identical
+    # filters for identical flush sequences (the parity-test contract).
+    def _flush_seeds(self) -> tuple[int, int]:
+        return self.seed + 31 * self._flush_count, self.seed + 7 * self._flush_count
+
+    def _compact_seeds(self) -> tuple[int, int]:
+        # disjoint from the flush schedule (compacted tables are new filters)
+        s = self.seed + 10007 + 131 * self._compact_count
+        return s, s + 1
+
+    def _build_filter(self, keys: np.ndarray, other_keys: np.ndarray,
+                      seeds: tuple[int, int]):
+        if self.filter_kind == "chained":
+            return ChainedTableFilter.build(keys, other_keys,
+                                            fp_alpha=self.fp_alpha,
+                                            seed1=seeds[0], seed2=seeds[1])
+        if self.filter_kind == "bloom":
+            if self.bits_per_key <= 0:
+                return None
+            fpr = max(1e-9, 2.0 ** (-self.bits_per_key * np.log(2)))
+            return BloomFilter.build(keys, float(fpr), seed=seeds[0])
+        return None
+
+    def flush(self) -> None:
+        """Freeze the memtable into the newest SSTable, build its filter,
+        exclude its keys from older chained filters online, compact if a
+        size-tiered run formed, and refresh the packed bank."""
+        if not self.memtable:
+            return
+        keys = np.sort(np.fromiter(self.memtable.keys(), dtype=np.uint64,
+                                   count=len(self.memtable)))
+        vals = np.array([self.memtable[int(k)] for k in keys], dtype=np.uint64)
+        self.memtable = {}
+        self._mem_keys = None
+        for tbl, filt in zip(self.sstables, self.filters):
+            if isinstance(filt, ChainedTableFilter):
+                filt.exclude_new(tbl.keys, keys)
+        other = (np.concatenate([t.keys for t in self.sstables])
+                 if self.sstables else np.empty(0, np.uint64))
+        f = self._build_filter(keys, other, self._flush_seeds())
+        self.sstables.insert(0, SSTable(keys, vals))
+        self.filters.insert(0, f)
+        self._flush_count += 1
+        self.stats.flushes += 1
+        if self.auto_compact:
+            self._compact_all()
+            if len(self.sstables) > MAX_TABLES:
+                # probe-kernel cap: force-merge the oldest tables into one
+                # run even when no size-tiered run qualifies
+                self._merge_run(MAX_TABLES - 1, len(self.sstables) - 1)
+        elif len(self.sstables) > MAX_TABLES:
+            raise RuntimeError(f"more than {MAX_TABLES} SSTables without "
+                               "compaction; call compact()")
+        self._sync_bank()
+
+    # ------------------------------------------------------------- compaction
+    def _find_run(self) -> tuple[int, int] | None:
+        """Longest age-adjacent run of >= compact_min_run tables whose sizes
+        stay within compact_size_ratio (size-tiered policy; adjacency keeps
+        newest-wins shadowing intact)."""
+        sizes = [len(t.keys) for t in self.sstables]
+        n = len(sizes)
+        for i in range(n):
+            j, mn, mx = i, sizes[i], sizes[i]
+            while j + 1 < n:
+                mn2, mx2 = min(mn, sizes[j + 1]), max(mx, sizes[j + 1])
+                if mx2 > self.compact_size_ratio * max(mn2, 1):
+                    break
+                j, mn, mx = j + 1, mn2, mx2
+            # a run must actually shrink the table count (length >= 2),
+            # whatever compact_min_run says — a 1-table "merge" would loop
+            if j - i + 1 >= max(self.compact_min_run, 2):
+                return i, j
+        return None
+
+    def _merge_run(self, i: int, j: int) -> None:
+        run = self.sstables[i:j + 1]
+        cat_k = np.concatenate([t.keys for t in run])          # newest first
+        cat_v = np.concatenate([
+            t.vals if t.vals is not None else np.zeros(len(t.keys), np.uint64)
+            for t in run])
+        # np.unique keeps the FIRST occurrence → newest-wins shadowing
+        uk, first_idx = np.unique(cat_k, return_index=True)
+        merged = SSTable(uk, cat_v[first_idx])
+        others = self.sstables[:i] + self.sstables[j + 1:]
+        other_keys = (np.concatenate([t.keys for t in others])
+                      if others else np.empty(0, np.uint64))
+        # fresh filter, exact over the WHOLE current universe: unlike flush
+        # (older keys at build + online exclusions later), every other
+        # table already exists, so its keys all land in the negative set.
+        f = self._build_filter(uk, other_keys, self._compact_seeds())
+        self.sstables[i:j + 1] = [merged]
+        self.filters[i:j + 1] = [f]
+        self._compact_count += 1
+        self.stats.compactions += 1
+
+    def _compact_all(self) -> None:
+        while True:
+            run = self._find_run()
+            if run is None:
+                return
+            self._merge_run(*run)
+
+    def compact(self) -> None:
+        """Run size-tiered compaction to a fixed point and refresh the bank."""
+        self._compact_all()
+        self._sync_bank()
+
+    # ------------------------------------------------------------ filter bank
+    def _sync_bank(self) -> None:
+        """Refresh the packed FilterBank after a structural or content
+        change: in place when every layout is unchanged (Othello exclusions
+        that did not resize), full re-jit otherwise (flush/compaction)."""
+        live = [f for f in self.filters if f is not None]
+        if not live:
+            self.service = None
+            self._chains = tuple(("always",) for _ in self.sstables)
+            self._tables_dev = jnp.zeros(TABLE_ALIGN, dtype=jnp.uint32)
+            return
+        if len(live) != len(self.sstables):
+            raise RuntimeError("mixed filtered/filterless tables unsupported")
+        if self.service is None:
+            self.service = FilterService(live, mesh=self.mesh,
+                                         interpret=self.interpret)
+        elif len(live) != self.service.bank.n_filters:
+            # filter added/removed: layouts certainly changed — skip the
+            # refresh_tables attempt (it would pack the whole bank once
+            # just to find out)
+            self.service.rebuild(live)
+        else:
+            try:
+                self.service.refresh_tables(live)
+            except ValueError:
+                self.service.rebuild(live)
+        self._chains = tuple(_chain_descriptor(lay)
+                             for lay in self.service.bank.layouts)
+        self._tables_dev = jnp.asarray(self.service.bank.tables)
+
+    # -------------------------------------------------------------- read path
+    def probe_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Fused probe of every SSTable filter for the whole batch in ONE
+        kernel launch -> (first_hit int32 [n] ∈ [0, N], hits_mask int32 [n]);
+        first_hit == N means no filter fired."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if not self.sstables:
+            raise RuntimeError("no SSTables; flush first")
+        hi, lo = H.np_split_u64(keys)
+        hi2d, lo2d, n = common.blockify(hi, lo)
+        first, mask = lsm_probe(self._tables_dev, jnp.asarray(hi2d),
+                                jnp.asarray(lo2d), chains=self._chains,
+                                interpret=self.interpret)
+        first, mask = jax.device_get((first, mask))   # one host pull for both
+        return first.reshape(-1)[:n], mask.reshape(-1)[:n]
+
+    def _resolve_chained(self, keys, first, found, vals, reads, idx):
+        """Chain rule (Fig 11b): read ONLY the newest-first first hit; a miss
+        there proves every other fired filter is a false positive too."""
+        n_tables = len(self.sstables)
+        hit = first < n_tables
+        reads[idx[hit]] = 1
+        for t in np.unique(first[hit]):
+            sel = first == t
+            contained, v = self.sstables[int(t)].get_many(keys[sel])
+            found[idx[sel]] = contained
+            vals[idx[sel]] = v
+        self.stats.sstable_reads += int(hit.sum())
+        self.stats.wasted_reads += int(hit.sum() - found[idx].sum())
+
+    def _resolve_masked(self, keys, mask, found, vals, reads, idx):
+        """Baseline policy (per-table Bloom / no filter): read EVERY fired
+        table newest→oldest until the key is found."""
+        alive = np.ones(len(keys), dtype=bool)
+        for t in range(len(self.sstables)):
+            cand = alive & (((mask >> t) & 1) == 1)
+            if not cand.any():
+                continue
+            reads[idx[cand]] += 1
+            self.stats.sstable_reads += int(cand.sum())
+            contained, v = self.sstables[t].get_many(keys[cand])
+            hit_idx = idx[cand][contained]
+            found[hit_idx] = True
+            vals[hit_idx] = v[contained]
+            self.stats.wasted_reads += int((~contained).sum())
+            alive[cand] &= ~contained
+
+    def get_batch(self, keys: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched point queries -> (found bool [n], values uint64 [n],
+        sstable_reads int32 [n]). Memtable hits cost 0 reads; with chained
+        filters every other key costs ≤ 1 read (found or wasted)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = len(keys)
+        found = np.zeros(n, dtype=bool)
+        vals = np.zeros(n, dtype=np.uint64)
+        reads = np.zeros(n, dtype=np.int32)
+        self.stats.gets += n
+        if n == 0:
+            return found, vals, reads
+        if self.memtable:
+            if self._mem_keys is None:
+                self._mem_keys = np.sort(np.fromiter(
+                    self.memtable.keys(), dtype=np.uint64,
+                    count=len(self.memtable)))
+            mk = self._mem_keys
+            pos = np.minimum(np.searchsorted(mk, keys), len(mk) - 1)
+            inmem = mk[pos] == keys
+            for i in np.flatnonzero(inmem):
+                vals[i] = self.memtable[int(keys[i])]
+            found |= inmem
+            self.stats.memtable_hits += int(inmem.sum())
+        rest = ~found
+        if not rest.any() or not self.sstables:
+            return found, vals, reads
+        idx = np.flatnonzero(rest)
+        sub = keys[idx]
+        self.stats.probed += len(sub)
+        first, mask = self.probe_batch(sub)
+        if self.filter_kind == "chained":
+            self._resolve_chained(sub, first, found, vals, reads, idx)
+        else:
+            self._resolve_masked(sub, mask, found, vals, reads, idx)
+        return found, vals, reads
+
+    def get(self, key: int) -> tuple[bool, int, int]:
+        """(found, value, reads) for one key."""
+        f, v, r = self.get_batch(np.array([key], np.uint64))
+        return bool(f[0]), int(v[0]), int(r[0])
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def n_tables(self) -> int:
+        return len(self.sstables)
+
+    @property
+    def key_count(self) -> int:
+        """Distinct keys across memtable + SSTables (upper bound: shadowed
+        duplicates across tables count once via the newest table)."""
+        seen = np.unique(np.concatenate(
+            [t.keys for t in self.sstables] or [np.empty(0, np.uint64)]))
+        mem = np.fromiter(self.memtable.keys(), dtype=np.uint64,
+                          count=len(self.memtable))
+        return int(len(np.union1d(seen, mem)))
+
+    @property
+    def filter_bits(self) -> int:
+        return sum(f.bits for f in self.filters if f is not None)

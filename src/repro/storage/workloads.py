@@ -1,0 +1,162 @@
+"""Deterministic point-query workload generators + §5.4 latency accounting.
+
+Workloads are materialized up front as a list of ``WorkloadOp`` batches
+(seeded — the same arguments always produce the same traffic), so a store
+under test and a host-side reference model can replay identical streams.
+
+Three shapes, mirroring the YCSB-style mixes LSM papers benchmark:
+
+- ``uniform_write_heavy``   — mostly puts over a uniform key space; the
+  flush/compaction write-amplification exerciser.
+- ``zipfian_read_heavy``    — mostly gets with Zipf-ranked popularity over
+  the inserted keys (hot-key skew); the filter-bank cache-residency case.
+- ``mixed_read_write``      — interleaved puts/gets where a configurable
+  fraction of gets miss the store entirely; the ChainedFilter headline
+  case (misses are where the ≤ 1 wasted-read rule pays).
+
+``LatencyAccountant`` converts per-get SSTable read counts to microseconds
+with the calibrated ``core.lsm.latency_model`` and reports the Fig-12
+percentiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.lsm import latency_model
+
+
+@dataclass(frozen=True)
+class WorkloadOp:
+    kind: str                       # 'put' | 'get'
+    keys: np.ndarray                # uint64 [batch]
+    vals: np.ndarray | None = None  # uint64 [batch] for puts
+
+
+def _key_universe(n: int, seed: int) -> np.ndarray:
+    """Distinct uint64 keys, deterministic in (n, seed)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(1, 2 ** 63, size=int(n * 1.2) + 64, dtype=np.uint64)
+    keys = keys[np.sort(np.unique(keys, return_index=True)[1])]  # keep order
+    while len(keys) < n:  # pragma: no cover — astronomically unlikely
+        extra = rng.integers(1, 2 ** 63, size=n, dtype=np.uint64)
+        keys = np.concatenate([keys, np.setdiff1d(extra, keys)])
+    return keys[:n]
+
+
+def _zipf_weights(n: int, theta: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** theta
+    return w / w.sum()
+
+
+def uniform_write_heavy(n_ops: int, batch: int = 256, read_frac: float = 0.1,
+                        seed: int = 0) -> list[WorkloadOp]:
+    """~90% puts of fresh uniform keys, ~10% gets of already-written keys."""
+    rng = np.random.default_rng(seed + 1)
+    universe = _key_universe(n_ops * batch, seed)
+    ops: list[WorkloadOp] = []
+    cursor = 0
+    for _ in range(n_ops):
+        if cursor == 0 or rng.random() >= read_frac:
+            keys = universe[cursor:cursor + batch]
+            ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
+            cursor += batch
+        else:
+            ops.append(WorkloadOp(
+                "get", rng.choice(universe[:cursor], size=batch)))
+    return ops
+
+
+def zipfian_read_heavy(n_ops: int, batch: int = 256, n_keys: int = 8192,
+                       write_frac: float = 0.05, theta: float = 1.1,
+                       seed: int = 0) -> list[WorkloadOp]:
+    """Load ``n_keys`` once, then ~95% gets with Zipf(θ) popularity (rank =
+    insertion order) and ~5% overwrites of the same hot ranks."""
+    rng = np.random.default_rng(seed + 2)
+    universe = _key_universe(n_keys, seed)
+    weights = _zipf_weights(n_keys, theta)
+    ops: list[WorkloadOp] = []
+    for start in range(0, n_keys, batch):
+        keys = universe[start:start + batch]
+        ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
+    for _ in range(n_ops):
+        keys = rng.choice(universe, size=batch, p=weights)
+        if rng.random() < write_frac:
+            ops.append(WorkloadOp("put", keys, keys + np.uint64(1)))
+        else:
+            ops.append(WorkloadOp("get", keys))
+    return ops
+
+
+def mixed_read_write(n_ops: int, batch: int = 256, read_frac: float = 0.5,
+                     miss_frac: float = 0.5, seed: int = 0
+                     ) -> list[WorkloadOp]:
+    """Interleaved puts/gets; ``miss_frac`` of each get batch draws keys
+    that were NEVER inserted (the wasted-read / tail-latency probe)."""
+    rng = np.random.default_rng(seed + 3)
+    universe = _key_universe(2 * n_ops * batch, seed)
+    present, absent = universe[::2], universe[1::2]   # disjoint by parity
+    ops: list[WorkloadOp] = []
+    cursor = 0
+    for _ in range(n_ops):
+        if cursor == 0 or rng.random() >= read_frac:
+            keys = present[cursor:cursor + batch]
+            ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
+            cursor += batch
+        else:
+            n_miss = int(round(batch * miss_frac))
+            hits = rng.choice(present[:cursor], size=batch - n_miss)
+            misses = rng.choice(absent, size=n_miss, replace=False)
+            keys = np.concatenate([hits, misses])
+            rng.shuffle(keys)
+            ops.append(WorkloadOp("get", keys))
+    return ops
+
+
+@dataclass
+class LatencyAccountant:
+    """Accumulates per-get SSTable read counts; reports the calibrated
+    Fig-12 latency percentiles."""
+
+    probes_cost_us: float = 2.0
+    read_cost_us: float = 9.0
+    reads: list = field(default_factory=list)
+
+    def record(self, reads: np.ndarray) -> None:
+        self.reads.append(np.asarray(reads, dtype=np.int64))
+
+    def report(self) -> dict:
+        if not self.reads:
+            return {"n": 0}
+        reads = np.concatenate(self.reads)
+        lat = latency_model(reads, probes_cost_us=self.probes_cost_us,
+                            read_cost_us=self.read_cost_us)
+        return {
+            "n": int(len(reads)),
+            "avg_reads": float(reads.mean()),
+            "max_reads": int(reads.max()),
+            "p50_us": float(np.percentile(lat, 50)),
+            "p95_us": float(np.percentile(lat, 95)),
+            "p99_us": float(np.percentile(lat, 99)),
+        }
+
+
+def run_workload(store, ops: list[WorkloadOp],
+                 accountant: LatencyAccountant | None = None) -> dict:
+    """Replay a workload against an ``LsmStore``; returns the accountant
+    report plus hit-rate. The store's own ``stats`` keep the read/probe
+    totals."""
+    accountant = accountant or LatencyAccountant()
+    n_found = n_get = 0
+    for op in ops:
+        if op.kind == "put":
+            store.put_batch(op.keys, op.vals)
+        else:
+            found, _, reads = store.get_batch(op.keys)
+            accountant.record(reads)
+            n_found += int(found.sum())
+            n_get += len(op.keys)
+    out = accountant.report()
+    out["hit_rate"] = n_found / max(1, n_get)
+    return out
