@@ -30,6 +30,14 @@ GATES = [
      "fused_probe_speedup", "higher"),
     ("lsm_store (batched storage engine)",
      "p99_us_chained_miss", "lower"),
+    # write path (ISSUE 3): bulk Othello construction and end-to-end ingest
+    # must stay an order of magnitude ahead of the per-key legacy path.
+    # Both gates are same-machine RATIOS — absolute MKeys/s is recorded in
+    # the metrics but not gated (runner-speed variance would flap it).
+    ("write_path (bulk-synchronous ingest)",
+     "bulk_build_speedup", "higher"),
+    ("write_path (bulk-synchronous ingest)",
+     "ingest_speedup_vs_legacy", "higher"),
 ]
 
 

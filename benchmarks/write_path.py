@@ -1,0 +1,220 @@
+"""Write-path benchmark: bulk-synchronous ingest vs the per-key legacy path.
+
+Four measurements:
+
+1. **Bulk Othello construction** — vectorized bipartite peeling
+   (``Othello.build``) vs the per-key dict-adjacency reference
+   (``othello_ref.SequentialOthello``) on the same keys/values/seed.
+   Acceptance: ≥ 10x at n ≥ 50k keys.
+2. **End-to-end chained ingest** — ``put_batch`` → ``flush`` (filter build
+   + batched online exclusions + bank sync) → size-tiered compaction on the
+   real ``LsmStore``, vs a faithful emulation of the pre-bulk write path
+   (dict memtable, per-key memtable drain, ``np.isin`` exclusion screens,
+   per-key sequential stage-2 builds/excludes, same per-flush bank syncs).
+   Acceptance: ≥ 5x with ≥ 8 live tables at CI scale.
+3. **Per-phase latency** — memtable merge, flush, and compaction wall time
+   for the chained store, plus bloom-kind ingest throughput for reference.
+4. **Read-path parity** — after ingest, the batched fused-kernel read path
+   is cross-checked bit-for-bit against the host discrete-event model over
+   the store's own tables/filters (found AND reads).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import hashing as H
+from repro.core.lsm import ChainedTableFilter, SSTable
+from repro.core.othello import DynamicExactFilter, Othello
+from repro.core.othello_ref import SequentialOthello
+from repro.core.bloomier import XorFilter
+from repro.serving.filter_service import FilterService
+from repro.storage import LsmStore
+from ._util import host_crosscheck, mops, render_table, scale, time_op
+
+
+class LegacyWriter:
+    """The pre-bulk (PR 2) write path, reconstructed for an honest baseline:
+    dict memtable, per-key drain, per-key sequential Othello construction
+    and exclusion walks, ``np.isin`` own-key screens — with the same seed
+    schedule and the same per-flush FilterBank syncs as the real store."""
+
+    def __init__(self, fp_alpha: int = 7, seed: int = 0):
+        self.fp_alpha = fp_alpha
+        self.seed = seed
+        self.memtable: dict = {}
+        self.sstables: list[SSTable] = []
+        self.filters: list[ChainedTableFilter] = []
+        self.service: FilterService | None = None
+        self._flush_count = 0
+        self._compact_count = 0
+
+    def put_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        self.memtable.update(zip(keys.tolist(), values.tolist()))
+
+    def _seeds(self) -> tuple[int, int]:
+        return (self.seed + 31 * self._flush_count,
+                self.seed + 7 * self._flush_count)
+
+    def _build_filter(self, keys, other_keys, seeds) -> ChainedTableFilter:
+        f1 = XorFilter.build(keys, self.fp_alpha, seed=seeds[0])
+        other = other_keys[~np.isin(other_keys, keys)]
+        fp = other[f1.query(other)] if len(other) else other
+        cat = np.concatenate([keys, fp])
+        vals = np.concatenate([np.ones(len(keys), np.uint8),
+                               np.zeros(len(fp), np.uint8)])
+        f2 = DynamicExactFilter(oth=SequentialOthello.build(
+            cat, vals, seed=seeds[1]))
+        return ChainedTableFilter(f1=f1, f2=f2)
+
+    def flush(self) -> None:
+        if not self.memtable:
+            return
+        keys = np.sort(np.fromiter(self.memtable.keys(), dtype=np.uint64,
+                                   count=len(self.memtable)))
+        vals = np.array([self.memtable[int(k)] for k in keys],
+                        dtype=np.uint64)
+        self.memtable = {}
+        for tbl, filt in zip(self.sstables, self.filters):
+            fp = keys[filt.f1.query(keys)]
+            fp = fp[~np.isin(fp, tbl.keys)]
+            if len(fp):
+                filt.f2.exclude(fp)        # SequentialOthello: per-key loop
+        other = (np.concatenate([t.keys for t in self.sstables])
+                 if self.sstables else np.empty(0, np.uint64))
+        f = self._build_filter(keys, other, self._seeds())
+        self.sstables.insert(0, SSTable(keys, vals))
+        self.filters.insert(0, f)
+        self._flush_count += 1
+        self._sync_bank()
+
+    def compact_all(self) -> None:
+        """Merge every table into one (the run the size-tiered policy forms
+        over equal-size flushes) and rebuild its filter sequentially."""
+        run = self.sstables
+        cat_k = np.concatenate([t.keys for t in run])
+        cat_v = np.concatenate([t.vals for t in run])
+        uk, first_idx = np.unique(cat_k, return_index=True)
+        s = self.seed + 10007 + 131 * self._compact_count
+        f = self._build_filter(uk, np.empty(0, np.uint64), (s, s + 1))
+        self.sstables = [SSTable(uk, cat_v[first_idx])]
+        self.filters = [f]
+        self._compact_count += 1
+        self._sync_bank()
+
+    def _sync_bank(self) -> None:
+        if self.service is None:
+            self.service = FilterService(self.filters)
+        else:
+            self.service.rebuild(self.filters)
+
+
+def _drive(writer, batches, vbatches) -> dict:
+    """put_batch + flush per batch, then one compaction; per-phase timing."""
+    t_put = t_flush = 0.0
+    peak = 0
+    for ks, vs in zip(batches, vbatches):
+        t0 = time.perf_counter()
+        writer.put_batch(ks, vs)
+        t_put += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        writer.flush()
+        t_flush += time.perf_counter() - t0
+        peak = max(peak, len(writer.sstables))
+    t0 = time.perf_counter()
+    if isinstance(writer, LegacyWriter):
+        writer.compact_all()
+    else:
+        writer.compact()
+    t_compact = time.perf_counter() - t0
+    return {"t_put": t_put, "t_flush": t_flush, "t_compact": t_compact,
+            "t_total": t_put + t_flush + t_compact, "peak_tables": peak}
+
+
+def run():
+    # -- 1. bulk vs sequential Othello construction ------------------------
+    n_build = scale(200_000, 50_000)
+    keys = H.random_keys(n_build, seed=17)
+    vals = (H.np_hash_u32(*H.np_split_u64(keys), 5) & 1).astype(np.uint8)
+    t_bulk, bulk = time_op(Othello.build, keys, vals, seed=3, repeat=3)
+    t_seq, seq = time_op(SequentialOthello.build, keys, vals, seed=3,
+                         repeat=1)
+    assert (bulk.lookup(keys) == vals.astype(bool)).all()
+    assert (seq.lookup(keys) == vals.astype(bool)).all()
+    build_speedup = t_seq / t_bulk
+    build_verdict = "PASS" if build_speedup >= 10.0 else "FAIL"
+    out = (f"\n== write_path — bulk-synchronous ingest ==\n"
+           f"othello build, n={n_build}: bulk {t_bulk * 1e3:.1f} ms "
+           f"({mops(n_build, t_bulk):.2f} MKeys/s) | sequential "
+           f"{t_seq * 1e3:.0f} ms ({mops(n_build, t_seq):.3f} MKeys/s) | "
+           f"speedup {build_speedup:.1f}x (target >= 10x) [{build_verdict}]")
+
+    # -- 2. end-to-end ingest: LsmStore vs legacy write path ---------------
+    per = scale(100_000, 2048)
+    n_flushes = 12
+    all_keys = H.random_keys(per * n_flushes + 4096, seed=23)
+    batches = [all_keys[i * per:(i + 1) * per] for i in range(n_flushes)]
+    vbatches = [ks >> np.uint64(11) for ks in batches]
+
+    store = LsmStore(filter_kind="chained", seed=2,
+                     memtable_capacity=2 ** 62, auto_compact=False)
+    new_t = _drive(store, batches, vbatches)
+    legacy = LegacyWriter(seed=2)
+    leg_t = _drive(legacy, batches, vbatches)
+    ingest_speedup = leg_t["t_total"] / new_t["t_total"]
+    ingest_verdict = "PASS" if ingest_speedup >= 5.0 else "FAIL"
+    assert new_t["peak_tables"] >= 8 and leg_t["peak_tables"] >= 8
+
+    bloom = LsmStore(filter_kind="bloom", bits_per_key=10.0, seed=2,
+                     memtable_capacity=2 ** 62, auto_compact=False)
+    bloom_t = _drive(bloom, batches, vbatches)
+
+    n_ingest = per * n_flushes
+    rows = []
+    for name, t in (("chained (bulk)", new_t), ("chained (legacy)", leg_t),
+                    ("bloom (bulk)", bloom_t)):
+        rows.append([name, f"{t['t_put'] * 1e3:.1f}",
+                     f"{t['t_flush'] * 1e3 / n_flushes:.1f}",
+                     f"{t['t_compact'] * 1e3:.1f}",
+                     f"{t['t_total'] * 1e3:.0f}",
+                     f"{mops(n_ingest, t['t_total']):.3f}"])
+    out += render_table(
+        f"ingest, {n_flushes} flushes x {per} keys (peak "
+        f"{new_t['peak_tables']} live tables)",
+        ["path", "put ms", "flush ms/op", "compact ms", "total ms",
+         "MKeys/s"], rows)
+    out += (f"\ningest speedup vs legacy write path: {ingest_speedup:.2f}x "
+            f"(target >= 5x) [{ingest_verdict}]")
+
+    # -- 3. read-path parity after bulk ingest -----------------------------
+    rng = np.random.default_rng(3)
+    sample = np.concatenate([rng.choice(all_keys[:n_ingest], 400,
+                                        replace=False),
+                             all_keys[n_ingest:n_ingest + 400]])
+    match = host_crosscheck(store, sample, seed=2)
+    out += (f"\nhost-model cross-check after ingest ({len(sample)} keys): "
+            f"{'MATCH' if match else 'MISMATCH'}")
+
+    metrics = {
+        "bulk_build_n": int(n_build),
+        "t_bulk_build_ms": t_bulk * 1e3,
+        "t_seq_build_ms": t_seq * 1e3,
+        "bulk_build_speedup": float(build_speedup),
+        "bulk_build_target_met": bool(build_speedup >= 10.0),
+        "bulk_build_mkeys_s": mops(n_build, t_bulk),
+        "ingest_n_keys": int(n_ingest),
+        "ingest_flushes": n_flushes,
+        "live_tables_peak": int(new_t["peak_tables"]),
+        "t_ingest_chained_ms": new_t["t_total"] * 1e3,
+        "t_ingest_legacy_ms": leg_t["t_total"] * 1e3,
+        "ingest_speedup_vs_legacy": float(ingest_speedup),
+        "ingest_speedup_target_met": bool(ingest_speedup >= 5.0),
+        "ingest_mkeys_chained": mops(n_ingest, new_t["t_total"]),
+        "ingest_mkeys_bloom": mops(n_ingest, bloom_t["t_total"]),
+        "put_ms_total": new_t["t_put"] * 1e3,
+        "flush_ms_avg": new_t["t_flush"] * 1e3 / n_flushes,
+        "compact_ms": new_t["t_compact"] * 1e3,
+        "host_crosscheck_match": bool(match),
+    }
+    return out, metrics

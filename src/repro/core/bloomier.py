@@ -121,6 +121,39 @@ def bulk_peel(h0: np.ndarray, h1: np.ndarray, h2: np.ndarray, m: int,
     raise PeelingFailed("max_rounds exceeded")
 
 
+def bulk_peel2(u: np.ndarray, v: np.ndarray, m: int,
+               max_rounds: int = 4096) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Bipartite (2-uniform) variant of :func:`bulk_peel` for Othello's
+    acyclic A–B graph: each round peels every edge owning a degree-1 node.
+    Returns per-round (edge_idx, pivot_node); raises PeelingFailed when a
+    2-core (i.e. any cycle) survives — Othello reseeds in that case.
+
+    Rounds peel paths from both ends, so a length-L path costs L/2 rounds;
+    random subcritical graphs have O(log n) longest paths w.h.p., but the
+    bound is generous because a round is one cheap vector pass."""
+    n = u.shape[0]
+    alive = np.ones(n, dtype=bool)
+    deg = np.zeros(m, dtype=np.int32)
+    np.add.at(deg, u, 1)
+    np.add.at(deg, v, 1)
+    rounds: list[tuple[np.ndarray, np.ndarray]] = []
+    idx_all = np.arange(n)
+    for _ in range(max_rounds):
+        if not alive.any():
+            return rounds
+        a = idx_all[alive]
+        peel = (deg[u[a]] == 1) | (deg[v[a]] == 1)
+        if not peel.any():
+            raise PeelingFailed("non-empty 2-core (cyclic — reseed)")
+        p = a[peel]
+        ip = np.where(deg[u[p]] == 1, u[p], v[p])
+        rounds.append((p, ip))
+        alive[p] = False
+        np.add.at(deg, u[p], -1)
+        np.add.at(deg, v[p], -1)
+    raise PeelingFailed("max_rounds exceeded")
+
+
 def bulk_assign(rounds: list[tuple[np.ndarray, np.ndarray]],
                 h0, h1, h2, values: np.ndarray, m: int) -> np.ndarray:
     """Reverse-round bulk XOR encode. ``values`` are the α-bit targets."""

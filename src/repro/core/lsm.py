@@ -40,12 +40,7 @@ class SSTable:
 
     def contains_many(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized membership -> bool [n] (batched read path)."""
-        keys = np.asarray(keys, dtype=np.uint64)
-        idx = np.searchsorted(self.keys, keys)
-        idx_c = np.minimum(idx, max(len(self.keys) - 1, 0))
-        if len(self.keys) == 0:
-            return np.zeros(len(keys), dtype=bool)
-        return self.keys[idx_c] == keys
+        return _in_sorted(self.keys, np.asarray(keys, dtype=np.uint64))
 
     def get_many(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """(contained bool [n], values uint64 [n]) — values are 0 where the
@@ -60,6 +55,16 @@ class SSTable:
         if self.vals is not None:
             out[hit] = self.vals[idx_c[hit]]
         return hit, out
+
+
+def _in_sorted(sorted_keys: np.ndarray, qs: np.ndarray) -> np.ndarray:
+    """Membership of ``qs`` in an already-sorted key array -> bool [n];
+    O(n log m) binary search instead of ``np.isin``'s sort-merge over both
+    arrays (the same trick ``SSTable.contains_many`` uses)."""
+    if len(sorted_keys) == 0:
+        return np.zeros(len(qs), dtype=bool)
+    idx = np.minimum(np.searchsorted(sorted_keys, qs), len(sorted_keys) - 1)
+    return sorted_keys[idx] == qs
 
 
 @dataclass
@@ -81,7 +86,7 @@ class ChainedTableFilter:
         keys = np.asarray(keys, dtype=np.uint64)
         other = np.asarray(other_keys, dtype=np.uint64)
         f1 = XorFilter.build(keys, fp_alpha, seed=seed1)
-        other = other[~np.isin(other, keys)]
+        other = other[~_in_sorted(np.sort(keys), other)]
         fp = other[f1.query(other)] if len(other) else other
         f2 = DynamicExactFilter.build(keys, fp, seed=seed2)
         return cls(f1=f1, f2=f2)
@@ -89,10 +94,13 @@ class ChainedTableFilter:
     def exclude_new(self, own_keys: np.ndarray, new_keys: np.ndarray) -> None:
         """RocksDB-style online exclusion: ``new_keys`` just entered the
         level; whitelist-out the ones that stage-1 false-positives (unless
-        they are also this table's own keys)."""
+        they are also this table's own keys). ``own_keys`` must be sorted
+        (SSTable key arrays always are); membership is binary search and
+        the exclusion is ONE batched stage-2 union-find pass."""
         new_keys = np.asarray(new_keys, dtype=np.uint64)
         fp_keys = new_keys[self.f1.query(new_keys)]
-        fp_keys = fp_keys[~np.isin(fp_keys, own_keys)]
+        fp_keys = fp_keys[~_in_sorted(np.asarray(own_keys, dtype=np.uint64),
+                                      fp_keys)]
         if len(fp_keys):
             self.f2.exclude(fp_keys)
 

@@ -241,7 +241,10 @@ class FilterService:
         while every filter's layout (sizes, seeds, offsets) is unchanged —
         e.g. Bloom bit-flips from inserts or Othello exclusions that did not
         resize — so the jitted probe function and its compilation cache
-        survive."""
+        survive. Packing calls each filter's ``to_tables``, which is where
+        batched Othello exclusions materialize their lazily-flipped
+        components — one refresh per flush folds a whole batch of online
+        updates into the device buffer."""
         bank = FilterBank.pack(filters)
         if bank.layouts != self.bank.layouts:
             raise ValueError("filter layouts changed; build a new FilterService")

@@ -6,16 +6,19 @@ latency vs Bloom filters at equal space (Fig 12). ``core.lsm`` models one
 level per-key on the host; this module is the serving-scale engine on top
 of the PR-1 probe stack:
 
-- **Write path.** ``put_batch`` fills a memtable; ``flush`` freezes it into
-  the newest immutable ``SSTable`` and builds that table's two-stage
-  ChainedFilter (stage-1 Xor, stage-2 dynamic Othello —
+- **Write path.** ``put_batch`` merges each batch into a sorted-array
+  memtable (newest-wins, one vectorized merge — no Python dict); ``flush``
+  freezes it into the newest immutable ``SSTable`` and builds that table's
+  two-stage ChainedFilter (stage-1 Xor, stage-2 dynamic Othello —
   ``core.lsm.ChainedTableFilter``, the same construction and seed schedule
   as ``LsmLevelChained``, so a store and the host model fed the same flush
-  sequence are bit-identical). Older tables' filters exclude the new keys
-  online (§5.4.3). Size-tiered compaction merges age-adjacent runs of
-  similar size and rebuilds ONLY the merged table's filter, with negatives
-  drawn from every other table so per-table exactness over the store's key
-  universe survives.
+  sequence are bit-identical). Both filter stages build as bulk array
+  passes (Bloomier peeling / Othello bipartite peeling), and older tables'
+  filters exclude the new keys online (§5.4.3) with ONE batched union-find
+  pass per table instead of per-key component walks. Size-tiered
+  compaction merges age-adjacent runs of similar size and rebuilds ONLY
+  the merged table's filter, with negatives drawn from every other table
+  so per-table exactness over the store's key universe survives.
 
 - **Read path.** Every flush/compaction refreshes a ``FilterBank`` through
   the store's ``FilterService`` — in place (``refresh_tables``) when only
@@ -34,6 +37,7 @@ rule removes.
 """
 from __future__ import annotations
 
+import types
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -93,7 +97,6 @@ class LsmStore:
     interpret: bool = True
     mesh: object = None
 
-    memtable: dict = field(default_factory=dict, repr=False)
     sstables: list = field(default_factory=list, repr=False)   # newest first
     filters: list = field(default_factory=list, repr=False)    # parallel
     service: FilterService | None = field(default=None, repr=False)
@@ -106,22 +109,61 @@ class LsmStore:
         self._compact_count = 0
         self._chains: tuple = ()
         self._tables_dev = jnp.zeros(TABLE_ALIGN, dtype=jnp.uint32)
-        self._mem_keys: np.ndarray | None = None   # sorted memtable key cache
+        # array-backed memtable: parallel sorted key/value arrays, merged on
+        # every put_batch (newest-wins) — flush drains them with zero copies
+        self._mt_keys = np.empty(0, dtype=np.uint64)
+        self._mt_vals = np.empty(0, dtype=np.uint64)
+
+    @property
+    def memtable_len(self) -> int:
+        return len(self._mt_keys)
+
+    @property
+    def memtable(self) -> "types.MappingProxyType":
+        """Read-only dict view of the sorted-array memtable (debugging /
+        introspection; mutation raises — write through ``put_batch``)."""
+        return types.MappingProxyType(
+            dict(zip(self._mt_keys.tolist(), self._mt_vals.tolist())))
 
     # ------------------------------------------------------------- write path
     def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None
                   ) -> None:
-        """Upsert a key batch (newest write wins). Auto-flushes whenever the
-        memtable reaches capacity."""
+        """Upsert a key batch (newest write wins): one vectorized sorted
+        merge into the array memtable. Auto-flushes whenever the memtable
+        reaches capacity."""
         keys = np.asarray(keys, dtype=np.uint64)
         values = (np.zeros(len(keys), dtype=np.uint64) if values is None
                   else np.asarray(values, dtype=np.uint64))
         if len(keys) != len(values):
             raise ValueError("keys/values length mismatch")
-        self.memtable.update(zip(keys.tolist(), values.tolist()))
-        self._mem_keys = None
+        if len(keys):
+            # dedupe within the batch (reversed + unique keeps the LAST
+            # write), then merge into the sorted memtable
+            uk, first_idx = np.unique(keys[::-1], return_index=True)
+            uv = values[::-1][first_idx]
+            m = len(self._mt_keys)
+            if m < 16384 or len(uk) * 8 >= m:
+                # small memtable / large relative batch: one combined
+                # unique (newest occurrence first ⇒ batch shadows old)
+                cat_k = np.concatenate([uk, self._mt_keys])
+                cat_v = np.concatenate([uv, self._mt_vals])
+                mk, fi = np.unique(cat_k, return_index=True)
+                self._mt_keys, self._mt_vals = mk, cat_v[fi]
+            else:
+                # big memtable, small batch: overwrite hits in place and
+                # splice misses by position — O(batch log + memtable),
+                # no full re-sort
+                pos = np.searchsorted(self._mt_keys, uk)
+                pos_c = np.minimum(pos, m - 1)
+                hit = self._mt_keys[pos_c] == uk
+                self._mt_vals[pos_c[hit]] = uv[hit]
+                if (~hit).any():
+                    self._mt_keys = np.insert(self._mt_keys, pos[~hit],
+                                              uk[~hit])
+                    self._mt_vals = np.insert(self._mt_vals, pos[~hit],
+                                              uv[~hit])
         self.stats.puts += len(keys)
-        if len(self.memtable) >= self.memtable_capacity:
+        if len(self._mt_keys) >= self.memtable_capacity:
             self.flush()
 
     def put(self, key: int, value: int = 0) -> None:
@@ -154,13 +196,13 @@ class LsmStore:
         """Freeze the memtable into the newest SSTable, build its filter,
         exclude its keys from older chained filters online, compact if a
         size-tiered run formed, and refresh the packed bank."""
-        if not self.memtable:
+        if not len(self._mt_keys):
             return
-        keys = np.sort(np.fromiter(self.memtable.keys(), dtype=np.uint64,
-                                   count=len(self.memtable)))
-        vals = np.array([self.memtable[int(k)] for k in keys], dtype=np.uint64)
-        self.memtable = {}
-        self._mem_keys = None
+        # the array memtable IS the sorted, deduped run — drain directly
+        keys, vals = self._mt_keys, self._mt_vals
+        self._mt_keys = np.empty(0, dtype=np.uint64)
+        self._mt_vals = np.empty(0, dtype=np.uint64)
+        # one batched stage-2 exclusion per older table (vs per-key inserts)
         for tbl, filt in zip(self.sstables, self.filters):
             if isinstance(filt, ChainedTableFilter):
                 filt.exclude_new(tbl.keys, keys)
@@ -325,16 +367,11 @@ class LsmStore:
         self.stats.gets += n
         if n == 0:
             return found, vals, reads
-        if self.memtable:
-            if self._mem_keys is None:
-                self._mem_keys = np.sort(np.fromiter(
-                    self.memtable.keys(), dtype=np.uint64,
-                    count=len(self.memtable)))
-            mk = self._mem_keys
+        if len(self._mt_keys):
+            mk = self._mt_keys
             pos = np.minimum(np.searchsorted(mk, keys), len(mk) - 1)
             inmem = mk[pos] == keys
-            for i in np.flatnonzero(inmem):
-                vals[i] = self.memtable[int(keys[i])]
+            vals[inmem] = self._mt_vals[pos[inmem]]
             found |= inmem
             self.stats.memtable_hits += int(inmem.sum())
         rest = ~found
@@ -366,9 +403,7 @@ class LsmStore:
         duplicates across tables count once via the newest table)."""
         seen = np.unique(np.concatenate(
             [t.keys for t in self.sstables] or [np.empty(0, np.uint64)]))
-        mem = np.fromiter(self.memtable.keys(), dtype=np.uint64,
-                          count=len(self.memtable))
-        return int(len(np.union1d(seen, mem)))
+        return int(len(np.union1d(seen, self._mt_keys)))
 
     @property
     def filter_bits(self) -> int:

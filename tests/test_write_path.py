@@ -1,0 +1,234 @@
+"""Bulk-synchronous write path (ISSUE 3): vectorized Othello construction
+vs the sequential per-key reference, batched online exclusions through the
+parity union-find, the one-bulk-rebuild fallback, the array-backed
+memtable, and the searchsorted exclusion satellite.
+
+The bulk builder may settle on a different attempt seed than the
+sequential one (it reseeds on ANY cycle, the reference only on
+inconsistent ones) — the agreement contract is on *encoded-key lookups*,
+which is exactly what ChainedFilter stage 2 consumes.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.core.bloomier import PeelingFailed, bulk_peel2
+from repro.core.lsm import ChainedTableFilter, _in_sorted
+from repro.core.othello import DynamicExactFilter, Othello
+from repro.core.othello_ref import SequentialOthello
+from repro.storage import LsmStore
+
+KEYS = H.random_keys(60_000, seed=31)
+
+
+def _vals(n, seed):
+    return np.random.default_rng(seed).integers(0, 2, n).astype(np.uint8)
+
+
+# ------------------------------------------------------ bulk peel primitive
+def test_bulk_peel2_acyclic_and_cyclic():
+    # path graph 0-1-2-3 (edges are (A-node, B-node) pairs in one space)
+    u = np.array([0, 1, 2])
+    v = np.array([1, 2, 3])
+    rounds = bulk_peel2(u, v, 4)
+    assert sum(len(p) for p, _ in rounds) == 3
+    # triangle: non-empty 2-core must raise
+    with pytest.raises(PeelingFailed):
+        bulk_peel2(np.array([0, 1, 2]), np.array([1, 2, 0]), 3)
+    # duplicate edge = 2-cycle
+    with pytest.raises(PeelingFailed):
+        bulk_peel2(np.array([0, 0]), np.array([1, 1]), 2)
+    assert bulk_peel2(np.empty(0, np.int64), np.empty(0, np.int64), 4) == []
+
+
+# ------------------------------------------------- bulk vs sequential build
+@given(st.integers(1, 1500), st.integers(0, 10 ** 6))
+@settings(max_examples=12, deadline=None)
+def test_bulk_build_matches_sequential_reference(n, seed):
+    """Every encoded key decodes to its value under BOTH builders."""
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(KEYS, size=n, replace=False)
+    vals = rng.integers(0, 2, n).astype(np.uint8)
+    bulk = Othello.build(keys, vals, seed=seed % 97)
+    seq = SequentialOthello.build(keys, vals, seed=seed % 97)
+    np.testing.assert_array_equal(bulk.lookup(keys), vals.astype(bool))
+    np.testing.assert_array_equal(seq.lookup(keys), vals.astype(bool))
+    assert bulk.n_keys == seq.n_keys == n
+
+
+def test_bulk_build_duplicate_keys_keep_last():
+    keys = np.concatenate([KEYS[:500], KEYS[:250]])
+    vals = np.concatenate([np.zeros(500, np.uint8), np.ones(250, np.uint8)])
+    oth = Othello.build(keys, vals, seed=4)
+    assert oth.n_keys == 500
+    assert oth.lookup(KEYS[:250]).all()          # later writes win
+    assert not oth.lookup(KEYS[250:500]).any()
+
+
+# --------------------------------------- batched exclude/include sequences
+@given(st.integers(1, 4), st.integers(10, 400), st.integers(0, 10 ** 6))
+@settings(max_examples=8, deadline=None)
+def test_batched_updates_match_sequential_reference(n_batches, per, seed):
+    """Random batched exclude/include sequences (with intra-batch
+    duplicates and re-excludes) keep bulk and sequential Othello agreeing
+    with the ground-truth key->value map."""
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(KEYS, size=2000 + 4 * 400, replace=False)
+    base_k, pos = pool[:2000], pool[:700]
+    bulk = DynamicExactFilter.build(pos, base_k[700:2000], seed=seed % 89)
+    seq = SequentialOthello.build(
+        base_k, np.concatenate([np.ones(700, np.uint8),
+                                np.zeros(1300, np.uint8)]), seed=seed % 89)
+    truth = dict(zip(base_k.tolist(),
+                     [1] * 700 + [0] * 1300))
+    off = 2000
+    for b in range(n_batches):
+        fresh = pool[off:off + per]
+        off += per
+        seen = rng.choice(base_k, size=min(per, 50), replace=False)
+        batch = np.concatenate([fresh, seen, fresh[: per // 2]])
+        val = int(rng.integers(0, 2))
+        # re-writing already-encoded keys to the SAME value must be a no-op;
+        # keep them consistent with the truth map to avoid flips here
+        batch = np.array([k for k in batch.tolist()
+                          if truth.get(k, val) == val], dtype=np.uint64)
+        if not len(batch):
+            continue
+        (bulk.exclude if val == 0 else bulk.include)(batch)
+        seq.insert_batch(batch, np.full(len(batch), val, np.uint8))
+        truth.update((int(k), val) for k in batch.tolist())
+        allk = np.fromiter(truth, dtype=np.uint64, count=len(truth))
+        expect = np.array([truth[int(k)] for k in allk], dtype=bool)
+        np.testing.assert_array_equal(bulk.query(allk), expect)
+        np.testing.assert_array_equal(seq.lookup(allk), expect)
+        assert bulk.oth.n_keys == len(truth) == seq.n_keys
+
+
+def test_value_flip_reassigns_without_reseed():
+    """Value updates re-solve the unchanged forest with one bulk
+    peel+reassign: same seed and sizes, so the packed-table layout (and
+    with it the FilterService jit cache) survives LRU-churn style
+    evict/re-promote flips."""
+    pos, neg = KEYS[:600], KEYS[600:1800]
+    f = DynamicExactFilter.build(pos, neg, seed=6)
+    layout_before = (f.oth.seed, f.oth.ma, f.oth.mb)
+    flip = neg[:80]
+    f.include(flip)                       # 0 -> 1 value updates
+    assert (f.oth.seed, f.oth.ma, f.oth.mb) == layout_before
+    assert f.query(flip).all()
+    assert f.query(pos).all()
+    assert not f.query(neg[80:]).any()
+    assert f.oth.n_keys == 1800
+    # churn: repeated singleton demote/promote (the prefix-cache pattern)
+    for k in pos[:20]:
+        f.exclude(np.array([k], np.uint64))
+        assert not f.query(np.array([k], np.uint64))[0]
+        f.include(np.array([k], np.uint64))
+    assert f.query(pos).all()
+    assert (f.oth.seed, f.oth.ma, f.oth.mb) == layout_before
+
+
+def test_value_flips_mixed_with_new_keys_in_one_batch():
+    pos, neg = KEYS[:400], KEYS[400:1200]
+    f = DynamicExactFilter.build(pos, neg, seed=8)
+    batch = np.concatenate([pos[:50], KEYS[1200:1300]])   # flips + fresh
+    f.exclude(batch)
+    assert not f.query(batch).any()
+    assert f.query(pos[50:]).all()
+    assert not f.query(neg).any()
+    assert f.oth.n_keys == 1300
+
+
+def test_exclude_materializes_into_packed_tables():
+    """A bank refresh after batched exclusions must pack current bits."""
+    f = DynamicExactFilter.build(KEYS[:500], KEYS[500:1500], seed=9)
+    new_neg = KEYS[1500:1700]
+    f.exclude(new_neg)
+    tables, lay = f.to_tables()
+    g = DynamicExactFilter.from_tables(tables, lay)
+    q = KEYS[:2500]
+    np.testing.assert_array_equal(f.query(q), g.query(q))
+    assert not g.query(new_neg).any()
+
+
+def test_query_only_reconstruction_rejects_inserts():
+    f = DynamicExactFilter.build(KEYS[:300], KEYS[300:900], seed=2)
+    g = DynamicExactFilter.from_tables(*f.to_tables())
+    with pytest.raises(RuntimeError, match="query-only"):
+        g.exclude(KEYS[900:910])
+
+
+def test_insert_batch_empty_is_noop():
+    f = DynamicExactFilter.build(KEYS[:100], KEYS[100:300], seed=1)
+    before = f.oth.n_keys
+    f.exclude(np.empty(0, np.uint64))
+    f.include(np.empty(0, np.uint64))
+    assert f.oth.n_keys == before
+
+
+# ------------------------------------------------- searchsorted satellites
+def test_in_sorted_matches_isin():
+    own = np.sort(KEYS[:4000])
+    qs = np.concatenate([KEYS[2000:6000], np.array([0, 2 ** 64 - 1], np.uint64)])
+    np.testing.assert_array_equal(_in_sorted(own, qs), np.isin(qs, own))
+    assert not _in_sorted(np.empty(0, np.uint64), qs).any()
+
+
+def test_exclude_new_batches_per_table():
+    own = np.sort(KEYS[:2000])
+    f = ChainedTableFilter.build(own, KEYS[2000:6000], seed1=3, seed2=4)
+    new = np.concatenate([KEYS[6000:9000], own[:200]])   # incl. own keys
+    f.exclude_new(own, new)
+    assert f.query(own).all()                  # own keys never excluded
+    assert not f.query(KEYS[6000:9000]).any()  # stage-1 FPs whitelisted out
+
+
+# --------------------------------------------------- array-backed memtable
+def test_memtable_merge_newest_wins_and_flush_drains_sorted():
+    store = LsmStore(seed=21, memtable_capacity=10 ** 9)
+    ks = KEYS[:512]
+    store.put_batch(ks, ks)
+    # duplicate keys WITHIN one batch: last occurrence wins
+    dup = np.concatenate([ks[:32], ks[:32]])
+    dvals = np.concatenate([np.zeros(32, np.uint64),
+                            np.full(32, 7, np.uint64)])
+    store.put_batch(dup, dvals)
+    # overwrite ACROSS batches: newest batch wins
+    store.put_batch(ks[32:64], np.full(32, 9, np.uint64))
+    assert store.memtable_len == 512
+    f, v, r = store.get_batch(ks)
+    assert f.all() and (r == 0).all()
+    np.testing.assert_array_equal(v[:32], np.full(32, 7, np.uint64))
+    np.testing.assert_array_equal(v[32:64], np.full(32, 9, np.uint64))
+    np.testing.assert_array_equal(v[64:], ks[64:])
+    store.flush()
+    assert store.memtable_len == 0 and store.n_tables == 1
+    t = store.sstables[0]
+    assert (np.diff(t.keys.astype(np.int64)) > 0).all()   # sorted, deduped
+    f2, v2, _ = store.get_batch(ks)
+    assert f2.all()
+    np.testing.assert_array_equal(v2, v)                  # values survive
+
+
+def test_memtable_dict_view_matches_arrays():
+    store = LsmStore(seed=22, memtable_capacity=10 ** 9)
+    store.put_batch(KEYS[:8], np.arange(8, dtype=np.uint64))
+    view = store.memtable
+    assert view == {int(k): int(i) for i, k in enumerate(KEYS[:8])}
+
+
+def test_auto_flush_at_capacity_keeps_put_get_parity():
+    store = LsmStore(seed=23, memtable_capacity=256, compact_min_run=3)
+    rng = np.random.default_rng(5)
+    written = {}
+    for i in range(7):
+        ks = rng.choice(KEYS[:3000], size=200, replace=False)
+        vs = rng.integers(1, 2 ** 32, size=200).astype(np.uint64)
+        store.put_batch(ks, vs)
+        written.update(zip(ks.tolist(), vs.tolist()))
+    allk = np.fromiter(written, dtype=np.uint64, count=len(written))
+    found, vals, reads = store.get_batch(allk)
+    assert found.all() and (reads <= 1).all()
+    np.testing.assert_array_equal(
+        vals, np.array([written[int(k)] for k in allk], dtype=np.uint64))
