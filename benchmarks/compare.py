@@ -38,6 +38,15 @@ GATES = [
      "bulk_build_speedup", "higher"),
     ("write_path (bulk-synchronous ingest)",
      "ingest_speedup_vs_legacy", "higher"),
+    # scan/delete (ISSUE 4): both metrics are seed-deterministic fractions,
+    # not wall-clock, so the tolerance band tracks code changes only.
+    # prune_frac: min/max fences must keep skipping table slices for narrow
+    # windows; deleted_key_avg_reads: tombstone exclusion must keep deleted
+    # keys at ~0 reads (bounded by the stage-1 fp rate once GC erases them).
+    ("scan_delete (range scans + tombstone deletes)",
+     "scan_prune_frac", "higher"),
+    ("scan_delete (range scans + tombstone deletes)",
+     "deleted_key_avg_reads", "lower"),
 ]
 
 

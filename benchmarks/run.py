@@ -26,7 +26,7 @@ def main() -> int:
 
     from . import (chain_rule, static_dictionary, huffman, adaptive_hashing,
                    lsm_pointquery, lsm_store, learned_filter, roofline,
-                   filter_service, write_path)
+                   filter_service, write_path, scan_delete)
     benches = [
         ("chain_rule (§2)", chain_rule.run),
         ("static_dictionary (§5.1, Fig 6/7)", static_dictionary.run),
@@ -35,6 +35,7 @@ def main() -> int:
         ("lsm_pointquery (§5.4, Fig 12)", lsm_pointquery.run),
         ("lsm_store (batched storage engine)", lsm_store.run),
         ("write_path (bulk-synchronous ingest)", write_path.run),
+        ("scan_delete (range scans + tombstone deletes)", scan_delete.run),
         ("learned_filter (§5.5, Fig 13)", learned_filter.run),
         ("roofline (dry-run artifacts)", roofline.run),
         ("filter_service (fused cascade vs per-layer)", filter_service.run),

@@ -1,0 +1,176 @@
+"""Scan + delete benchmark: range-scan throughput and delete-heavy ingest.
+
+The paper's RocksDB case study (§8, Fig 12) assumes full LSM traffic; this
+bench covers the two op kinds the point-query benches don't:
+
+1. **Range scans.** A store whose flushes cover contiguous key subranges
+   (the fence-friendly layout compaction naturally produces) is scanned
+   with windows of several widths. Filters cannot prune a range — a window
+   is not a key — but per-table min/max fences can; the bench reports raw
+   scan throughput (MKeys/s merged out) and the fence prune fraction
+   (table slices skipped / table slices considered), and cross-checks
+   every scanned window against a dict reference model.
+
+2. **Delete-heavy ingest.** A put/delete/get/scan CRUD stream
+   (``workloads.crud_mixed``) runs against the chained store; after a
+   final flush, every deleted key is probed. While its tombstone (or the
+   exclusions it minted) is live, a deleted key fires NOTHING and costs 0
+   reads; once compaction GC has erased the key entirely, it degrades to
+   an ordinary absent key — at most one stage-1 false-positive wasted read
+   (rate 2^-fp_alpha). The gated ``deleted_key_avg_reads`` metric is
+   therefore a small seed-deterministic value bounded by ~2^-7 ≈ 0.008;
+   any regression above baseline means deleted keys are burning reads
+   again. Compaction-GC stats (tombstones collected) ride along.
+
+Gated in ``compare.py``: ``scan_prune_frac`` (higher) and
+``deleted_key_avg_reads`` (lower — baseline 0.0); throughputs are recorded
+but not gated (runner-speed variance).
+
+    PYTHONPATH=src python -m benchmarks.scan_delete      # standalone
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.storage import LsmStore, crud_mixed, run_workload
+from ._util import mops, render_table, scale
+
+
+def _dict_replay(ops) -> dict:
+    """Trivially-correct replay of a WorkloadOp stream -> {key: val}."""
+    data: dict = {}
+    for op in ops:
+        if op.kind == "put":
+            data.update(zip(op.keys.tolist(), op.vals.tolist()))
+        elif op.kind == "del":
+            for k in op.keys.tolist():
+                data.pop(k, None)
+    return data
+
+
+def _scan_bench() -> tuple[str, dict]:
+    per = scale(100_000, 4096)
+    n_tables = 8
+    universe = np.sort(np.unique(
+        np.random.default_rng(7).integers(1, 2 ** 63, size=per * n_tables + 64,
+                                          dtype=np.uint64)))[:per * n_tables]
+    store = LsmStore(filter_kind="chained", seed=5, memtable_capacity=2 ** 62,
+                     auto_compact=False)
+    model: dict = {}
+    for i in range(n_tables):
+        ks = universe[i * per:(i + 1) * per]
+        vs = ks >> np.uint64(13)
+        store.put_batch(ks, vs)
+        store.flush()
+        model.update(zip(ks.tolist(), vs.tolist()))
+    # delete a stripe so scans exercise tombstone masking too
+    dels = universe[::9]
+    store.delete_batch(dels)
+    store.flush()
+    for k in dels.tolist():
+        model.pop(k, None)
+
+    rng = np.random.default_rng(11)
+    n_scans = scale(400, 120)
+    rows, metrics = [], {}
+    total_keys = total_t = 0.0
+    for frac, label in ((0.01, "1% window"), (0.05, "5% window"),
+                        (0.25, "25% window")):
+        span = max(2, int(len(universe) * frac))
+        read0 = store.stats.scan_tables_read
+        prune0 = store.stats.scan_tables_pruned
+        out_keys = 0
+        t0 = time.perf_counter()
+        for _ in range(n_scans):
+            a = int(rng.integers(0, len(universe) - span))
+            ks, _vs = store.scan(int(universe[a]), int(universe[a + span]))
+            out_keys += len(ks)
+        dt = time.perf_counter() - t0
+        total_keys += out_keys
+        total_t += dt
+        read = store.stats.scan_tables_read - read0
+        pruned = store.stats.scan_tables_pruned - prune0
+        prune_frac = pruned / max(1, read + pruned)
+        rows.append([label, n_scans, out_keys, f"{mops(out_keys, dt):.2f}",
+                     f"{prune_frac:.2f}"])
+        metrics[f"scan_prune_frac_{label.split('%')[0]}pct"] = float(prune_frac)
+    # correctness: every window bit-exact vs the dict model
+    ok = True
+    model_keys = np.sort(np.array(list(model), dtype=np.uint64))
+    for _ in range(20):
+        span = max(2, int(len(universe) * 0.03))
+        a = int(rng.integers(0, len(universe) - span))
+        lo, hi = int(universe[a]), int(universe[a + span])
+        ks, vs = store.scan(lo, hi)
+        ref = model_keys[(model_keys >= lo) & (model_keys < hi)]
+        ok &= (len(ks) == len(ref) and (ks == ref).all()
+               and all(model[int(k)] == int(v) for k, v in zip(ks, vs)))
+    out = render_table(
+        f"range scans, {n_tables + 1} tables x {per} keys",
+        ["window", "scans", "keys out", "MKeys/s", "prune frac"], rows)
+    out += f"\nscan cross-check vs dict model: {'MATCH' if ok else 'MISMATCH'}"
+    metrics.update({
+        "scan_mkeys_s": mops(total_keys, total_t),
+        "scan_prune_frac": float(metrics["scan_prune_frac_1pct"]),
+        "scan_crosscheck_match": bool(ok),
+    })
+    return out, metrics
+
+
+def _delete_ingest_bench() -> tuple[str, dict]:
+    n_ops = scale(400, 60)
+    batch = scale(2048, 512)
+    ops = crud_mixed(n_ops, batch=batch, read_frac=0.2, delete_frac=0.35,
+                     scan_frac=0.05, seed=19)
+    store = LsmStore(filter_kind="chained", seed=3, memtable_capacity=batch * 4,
+                     compact_min_run=3)
+    t0 = time.perf_counter()
+    rep = run_workload(store, ops)
+    dt = time.perf_counter() - t0
+    store.flush()
+    n_keys = sum(len(op.keys) for op in ops)
+    # every deleted-and-not-rewritten key must cost ZERO reads (exclusion)
+    model = _dict_replay(ops)
+    deleted = np.array(sorted(
+        {int(k) for op in ops if op.kind == "del" for k in op.keys.tolist()}
+        - set(model)), dtype=np.uint64)
+    found, _vals, reads = store.get_batch(deleted)
+    avg_reads = float(reads.mean()) if len(reads) else 0.0
+    correct = not found.any()
+    # the model agrees on a live sample too
+    live = np.array(sorted(model), dtype=np.uint64)[::7]
+    f2, v2, _ = store.get_batch(live)
+    correct &= bool(f2.all()) and all(
+        model[int(k)] == int(v) for k, v in zip(live, v2))
+    out = (f"\n== delete-heavy ingest, {n_ops} ops x {batch} keys "
+           f"(35% deletes) ==\n"
+           f"ingest+serve {dt * 1e3:.0f} ms ({mops(n_keys, dt):.3f} MKeys/s) "
+           f"| tables {store.n_tables} | tombstones GC'd "
+           f"{store.stats.tombstones_gced}\n"
+           f"deleted keys probed: {len(deleted)} | avg reads "
+           f"{avg_reads:.4f} (bound: stage-1 fp 2^-7 = 0.0078) | contents "
+           f"{'MATCH' if correct else 'MISMATCH'}")
+    metrics = {
+        "delete_ingest_mkeys_s": mops(n_keys, dt),
+        "delete_ingest_p99_us": rep.get("p99_us", 0.0),
+        "tombstones_gced": int(store.stats.tombstones_gced),
+        "deleted_keys_probed": int(len(deleted)),
+        "deleted_key_avg_reads": avg_reads,
+        "delete_crosscheck_match": bool(correct),
+    }
+    return out, metrics
+
+
+def run():
+    out1, m1 = _scan_bench()
+    out2, m2 = _delete_ingest_bench()
+    return out1 + out2, {**m1, **m2}
+
+
+if __name__ == "__main__":
+    text, metrics = run()
+    print(text)
+    print({k: round(v, 4) if isinstance(v, float) else v
+           for k, v in metrics.items()})

@@ -29,32 +29,81 @@ from .bloomier import XorFilter
 class SSTable:
     """Immutable sorted run. Membership is binary search on the sorted key
     array (no Python-set mirror); ``vals`` optionally carries the payloads
-    aligned with ``keys`` (the storage engine's read path)."""
+    aligned with ``keys`` (the storage engine's read path); ``tombs``
+    optionally marks tombstone records (bool, aligned with ``keys``) — a
+    tombstone is a *physical* record that shadows every older version of its
+    key and means "deleted"."""
 
     keys: np.ndarray                      # sorted uint64
     vals: np.ndarray | None = field(repr=False, default=None)
+    tombs: np.ndarray | None = field(repr=False, default=None)
 
     def contains(self, key: int) -> bool:
+        """Physical membership (live OR tombstone record)."""
         i = int(np.searchsorted(self.keys, np.uint64(key)))
         return i < len(self.keys) and self.keys[i] == np.uint64(key)
 
     def contains_many(self, keys: np.ndarray) -> np.ndarray:
-        """Vectorized membership -> bool [n] (batched read path)."""
+        """Vectorized physical membership -> bool [n] (batched read path)."""
         return _in_sorted(self.keys, np.asarray(keys, dtype=np.uint64))
 
-    def get_many(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """(contained bool [n], values uint64 [n]) — values are 0 where the
-        key is absent or the table carries no payloads."""
+    def get_many(self, keys: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(live bool [n], values uint64 [n], dead bool [n]).
+
+        ``live`` — a live record for the key exists here; ``dead`` — the
+        record here is a tombstone (the key is deleted as of this table and
+        the search must STOP: older versions are shadowed). Values are 0
+        where the key is absent, dead, or the table carries no payloads."""
         keys = np.asarray(keys, dtype=np.uint64)
         out = np.zeros(len(keys), dtype=np.uint64)
+        none = np.zeros(len(keys), dtype=bool)
         if len(self.keys) == 0:
-            return np.zeros(len(keys), dtype=bool), out
+            return none, out, none.copy()
         idx = np.searchsorted(self.keys, keys)
         idx_c = np.minimum(idx, len(self.keys) - 1)
         hit = self.keys[idx_c] == keys
+        if self.tombs is None:
+            dead = none
+            live = hit
+        else:
+            dead = hit & self.tombs[idx_c]
+            live = hit & ~dead
         if self.vals is not None:
-            out[hit] = self.vals[idx_c[hit]]
-        return hit, out
+            out[live] = self.vals[idx_c[live]]
+        return live, out, dead
+
+    # -- min/max fences ------------------------------------------------------
+    # Filters cannot prune RANGE reads (a range is not a key); the sorted
+    # run's endpoints can: a scan skips any table whose [min_key, max_key]
+    # span misses the scan window.
+    @property
+    def min_key(self) -> int:
+        return int(self.keys[0]) if len(self.keys) else 0
+
+    @property
+    def max_key(self) -> int:
+        return int(self.keys[-1]) if len(self.keys) else 0
+
+    def overlaps_range(self, lo: int, hi: int) -> bool:
+        """Fence check: does [min_key, max_key] intersect [lo, hi)?"""
+        return bool(len(self.keys)) and self.min_key < hi and self.max_key >= lo
+
+    def slice_range(self, lo: int, hi: int
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(keys, vals, tombs) of all physical records with lo <= key < hi
+        (tombstones included — the caller's k-way merge masks them).
+        ``hi`` may be 2**64, making the window end-inclusive of the maximum
+        uint64 key."""
+        a = int(np.searchsorted(self.keys, np.uint64(lo), side="left"))
+        b = (len(self.keys) if hi >= 2 ** 64
+             else int(np.searchsorted(self.keys, np.uint64(hi), side="left")))
+        ks = self.keys[a:b]
+        vs = (self.vals[a:b] if self.vals is not None
+              else np.zeros(b - a, dtype=np.uint64))
+        ts = (self.tombs[a:b] if self.tombs is not None
+              else np.zeros(b - a, dtype=bool))
+        return ks, vs, ts
 
 
 def _in_sorted(sorted_keys: np.ndarray, qs: np.ndarray) -> np.ndarray:
@@ -101,6 +150,21 @@ class ChainedTableFilter:
         fp_keys = new_keys[self.f1.query(new_keys)]
         fp_keys = fp_keys[~_in_sorted(np.asarray(own_keys, dtype=np.uint64),
                                       fp_keys)]
+        if len(fp_keys):
+            self.f2.exclude(fp_keys)
+
+    def exclude_deleted(self, deleted_keys: np.ndarray) -> None:
+        """Tombstone semantics (the chain-rule step updates cannot skip):
+        ``deleted_keys`` are dead store-wide, so this filter must never fire
+        for them again — even where they are this table's OWN keys (a true
+        positive, which ``exclude_new`` deliberately leaves alone). Every
+        deleted key whose stage-1 fingerprint matches is pinned as an
+        explicit stage-2 negative; keys stage-1 rejects can never fire (the
+        Xor stage is immutable), so no edge is spent on them."""
+        deleted = np.asarray(deleted_keys, dtype=np.uint64)
+        if len(deleted) == 0:
+            return
+        fp_keys = deleted[self.f1.query(deleted)]
         if len(fp_keys):
             self.f2.exclude(fp_keys)
 

@@ -436,6 +436,16 @@ class DynamicExactFilter:
     def query(self, keys: np.ndarray) -> np.ndarray:
         return self.oth.lookup(keys)
 
+    @property
+    def positive_keys(self) -> np.ndarray:
+        """Keys currently ENROLLED with value 1 (sorted uint64) — the exact
+        positive set this filter guarantees to fire for. Tests use this to
+        assert tombstoned keys never stay enrolled as positives."""
+        if self.oth._ekeys is None:
+            raise RuntimeError("query-only Othello (from_tables) has no "
+                               "enrollment record")
+        return self.oth._ekeys[self.oth._eval == 1]
+
     def query_jax(self, hi, lo):
         return self.oth.lookup_jax(hi, lo)
 

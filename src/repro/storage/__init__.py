@@ -1,19 +1,23 @@
 """Batched, filter-guarded LSM storage engine (paper §5.4 at serving scale).
 
 ``LsmStore`` turns the PR-1 FilterBank/FilterService probe stack into an
-end-to-end point-query serving scenario: memtable → flush → size-tiered
+end-to-end full-CRUD serving scenario: memtable → flush → size-tiered
 compaction, with every SSTable guarded by a two-stage ChainedFilter whose
 packed tables live in ONE 128-word-aligned uint32 buffer probed by the
 fused ``kernels.lsm_probe`` kernel (one launch for all tables, ≤ 1 wasted
-SSTable read per query). ``workloads`` provides deterministic traffic
-generators and the §5.4 latency accounting.
+SSTable read per query). Deletes are tombstone records excluded from every
+chained filter (0 reads for deleted keys) and garbage-collected at
+compaction; ``scan(lo, hi)`` k-way merges sorted runs under min/max fence
+pruning. ``workloads`` provides deterministic traffic generators and the
+§5.4 latency accounting.
 """
 from .lsm_store import LsmStore, StoreStats
 from .workloads import (WorkloadOp, LatencyAccountant, uniform_write_heavy,
-                        zipfian_read_heavy, mixed_read_write, run_workload)
+                        zipfian_read_heavy, mixed_read_write, crud_mixed,
+                        run_workload)
 
 __all__ = [
     "LsmStore", "StoreStats", "WorkloadOp", "LatencyAccountant",
     "uniform_write_heavy", "zipfian_read_heavy", "mixed_read_write",
-    "run_workload",
+    "crud_mixed", "run_workload",
 ]

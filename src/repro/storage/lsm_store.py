@@ -29,11 +29,24 @@ of the PR-1 probe stack:
   newest-first first-hit per key with one vectorized ``searchsorted`` read:
   found ⇒ 1 read, miss-but-fired ⇒ exactly 1 wasted read, else 0.
 
+- **Deletes (tombstones).** ``delete_batch`` writes tombstone records that
+  ride the same memtable/flush machinery (newest-wins merge makes them
+  shadow older versions). A flushed tombstone is *excluded* from every
+  chained filter — never enrolled in its own table's filter and pinned to
+  stage-2 zero in older filters via ``exclude_deleted`` (true positives
+  too) — so a deleted key fires nothing and costs 0 reads; compaction
+  garbage-collects the record once no older run can still hold the key.
+
+- **Range scans.** ``scan(lo, hi)`` k-way merges memtable + SSTable slices
+  newest-first over the half-open window with newest-wins/tombstone
+  masking. Filters cannot prune a range; each sorted run's min/max fences
+  can, and do.
+
 Per-table Bloom (``filter_kind='bloom'``) and filterless
 (``filter_kind='none'``) baselines share the same probe kernel and batched
 read path via the kernel's ``hits_mask`` output — they just read every
-fired table until the key turns up, which is precisely the tail the chain
-rule removes.
+fired table until the key's newest record (live or tombstone) turns up,
+which is precisely the tail the chain rule removes.
 """
 from __future__ import annotations
 
@@ -46,7 +59,7 @@ import jax.numpy as jnp
 
 from repro.core import hashing as H
 from repro.core.bloom import BloomFilter
-from repro.core.lsm import SSTable, ChainedTableFilter
+from repro.core.lsm import SSTable, ChainedTableFilter, _in_sorted
 from repro.core.tables import TABLE_ALIGN, BloomTable, LsmChainLayout
 from repro.kernels import common
 from repro.kernels.lsm_probe import MAX_TABLES, lsm_probe
@@ -67,13 +80,18 @@ def _chain_descriptor(layout) -> tuple:
 @dataclass
 class StoreStats:
     puts: int = 0
+    deletes: int = 0
     gets: int = 0
+    scans: int = 0
     flushes: int = 0
     compactions: int = 0
     memtable_hits: int = 0
     probed: int = 0                  # keys that reached the filter bank
     sstable_reads: int = 0
     wasted_reads: int = 0            # reads that found nothing
+    tombstones_gced: int = 0         # tombstone records dropped (flush+compact)
+    scan_tables_read: int = 0        # table slices merged by scans
+    scan_tables_pruned: int = 0      # table slices skipped by min/max fences
 
     def as_dict(self) -> dict:
         d = dict(self.__dict__)
@@ -109,10 +127,12 @@ class LsmStore:
         self._compact_count = 0
         self._chains: tuple = ()
         self._tables_dev = jnp.zeros(TABLE_ALIGN, dtype=jnp.uint32)
-        # array-backed memtable: parallel sorted key/value arrays, merged on
-        # every put_batch (newest-wins) — flush drains them with zero copies
+        # array-backed memtable: parallel sorted key/value/tombstone arrays,
+        # merged on every put_batch/delete_batch (newest-wins) — flush drains
+        # them with zero copies. A True tombstone row means "deleted here".
         self._mt_keys = np.empty(0, dtype=np.uint64)
         self._mt_vals = np.empty(0, dtype=np.uint64)
+        self._mt_tombs = np.empty(0, dtype=bool)
 
     @property
     def memtable_len(self) -> int:
@@ -120,12 +140,49 @@ class LsmStore:
 
     @property
     def memtable(self) -> "types.MappingProxyType":
-        """Read-only dict view of the sorted-array memtable (debugging /
-        introspection; mutation raises — write through ``put_batch``)."""
+        """Read-only dict view of the sorted-array memtable's LIVE entries
+        (debugging / introspection; mutation raises — write through
+        ``put_batch``/``delete_batch``)."""
+        live = ~self._mt_tombs
         return types.MappingProxyType(
-            dict(zip(self._mt_keys.tolist(), self._mt_vals.tolist())))
+            dict(zip(self._mt_keys[live].tolist(),
+                     self._mt_vals[live].tolist())))
 
     # ------------------------------------------------------------- write path
+    def _memtable_merge(self, keys: np.ndarray, values: np.ndarray,
+                        tombs: bool) -> None:
+        """Newest-wins merge of one (deduped-last) record batch into the
+        sorted array memtable; ``tombs`` marks the whole batch as tombstones
+        (deletes) or live (puts)."""
+        # dedupe within the batch (reversed + unique keeps the LAST write)
+        uk, first_idx = np.unique(keys[::-1], return_index=True)
+        uv = values[::-1][first_idx]
+        ut = np.full(len(uk), tombs, dtype=bool)
+        m = len(self._mt_keys)
+        if m < 16384 or len(uk) * 8 >= m:
+            # small memtable / large relative batch: one combined unique
+            # (newest occurrence first ⇒ batch shadows old)
+            cat_k = np.concatenate([uk, self._mt_keys])
+            cat_v = np.concatenate([uv, self._mt_vals])
+            cat_t = np.concatenate([ut, self._mt_tombs])
+            mk, fi = np.unique(cat_k, return_index=True)
+            self._mt_keys, self._mt_vals = mk, cat_v[fi]
+            self._mt_tombs = cat_t[fi]
+        else:
+            # big memtable, small batch: overwrite hits in place and splice
+            # misses by position — O(batch log + memtable), no full re-sort
+            pos = np.searchsorted(self._mt_keys, uk)
+            pos_c = np.minimum(pos, m - 1)
+            hit = self._mt_keys[pos_c] == uk
+            self._mt_vals[pos_c[hit]] = uv[hit]
+            self._mt_tombs[pos_c[hit]] = tombs
+            if (~hit).any():
+                self._mt_keys = np.insert(self._mt_keys, pos[~hit], uk[~hit])
+                self._mt_vals = np.insert(self._mt_vals, pos[~hit], uv[~hit])
+                self._mt_tombs = np.insert(self._mt_tombs, pos[~hit], tombs)
+        if len(self._mt_keys) >= self.memtable_capacity:
+            self.flush()
+
     def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None
                   ) -> None:
         """Upsert a key batch (newest write wins): one vectorized sorted
@@ -136,38 +193,27 @@ class LsmStore:
                   else np.asarray(values, dtype=np.uint64))
         if len(keys) != len(values):
             raise ValueError("keys/values length mismatch")
-        if len(keys):
-            # dedupe within the batch (reversed + unique keeps the LAST
-            # write), then merge into the sorted memtable
-            uk, first_idx = np.unique(keys[::-1], return_index=True)
-            uv = values[::-1][first_idx]
-            m = len(self._mt_keys)
-            if m < 16384 or len(uk) * 8 >= m:
-                # small memtable / large relative batch: one combined
-                # unique (newest occurrence first ⇒ batch shadows old)
-                cat_k = np.concatenate([uk, self._mt_keys])
-                cat_v = np.concatenate([uv, self._mt_vals])
-                mk, fi = np.unique(cat_k, return_index=True)
-                self._mt_keys, self._mt_vals = mk, cat_v[fi]
-            else:
-                # big memtable, small batch: overwrite hits in place and
-                # splice misses by position — O(batch log + memtable),
-                # no full re-sort
-                pos = np.searchsorted(self._mt_keys, uk)
-                pos_c = np.minimum(pos, m - 1)
-                hit = self._mt_keys[pos_c] == uk
-                self._mt_vals[pos_c[hit]] = uv[hit]
-                if (~hit).any():
-                    self._mt_keys = np.insert(self._mt_keys, pos[~hit],
-                                              uk[~hit])
-                    self._mt_vals = np.insert(self._mt_vals, pos[~hit],
-                                              uv[~hit])
         self.stats.puts += len(keys)
-        if len(self._mt_keys) >= self.memtable_capacity:
-            self.flush()
+        if len(keys):
+            self._memtable_merge(keys, values, tombs=False)
 
     def put(self, key: int, value: int = 0) -> None:
         self.put_batch(np.array([key], np.uint64), np.array([value], np.uint64))
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        """Delete a key batch: tombstone records enter the memtable exactly
+        like puts (the newest-wins merge makes them shadow any older write,
+        in memory or on any SSTable) and flow to SSTables at flush. Deleting
+        a key that was never written is legal (a no-op once its tombstone is
+        garbage-collected)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        self.stats.deletes += len(keys)
+        if len(keys):
+            self._memtable_merge(keys, np.zeros(len(keys), dtype=np.uint64),
+                                 tombs=True)
+
+    def delete(self, key: int) -> None:
+        self.delete_batch(np.array([key], np.uint64))
 
     # seed schedule shared with LsmLevelChained._seeds → bit-identical
     # filters for identical flush sequences (the parity-test contract).
@@ -179,37 +225,85 @@ class LsmStore:
         s = self.seed + 10007 + 131 * self._compact_count
         return s, s + 1
 
-    def _build_filter(self, keys: np.ndarray, other_keys: np.ndarray,
-                      seeds: tuple[int, int]):
+    def _build_filter(self, live_keys: np.ndarray, dead_keys: np.ndarray,
+                      other_keys: np.ndarray, seeds: tuple[int, int],
+                      gone_keys: np.ndarray | None = None):
+        """Per-table filter over a physical run split into ``live_keys`` and
+        ``dead_keys`` (tombstones / keys shadowed by newer tombstones).
+
+        - chained: ONLY live keys enroll as positives — a deleted key must
+          never burn filter space or short-circuit the fused probe's
+          first-hit mask; dead keys join the negative universe so their
+          stage-1 fingerprint collisions are pinned to stage-2 zeros.
+        - bloom: every physical record enrolls (Bloom cannot exclude; the
+          read path discovers the tombstone by reading the table).
+
+        ``gone_keys`` (chained only) are keys with NO physical record left
+        (GC'd tombstones) pinned as extra negatives, so "deleted keys never
+        fire rebuilt filters" stays exact instead of false-positive-unlikely.
+        """
         if self.filter_kind == "chained":
-            return ChainedTableFilter.build(keys, other_keys,
+            assert (len(dead_keys) == 0 or
+                    not np.intersect1d(live_keys, dead_keys).size), \
+                "tombstoned keys must never enroll as filter positives"
+            extra = [dead_keys] if len(dead_keys) else []
+            if gone_keys is not None and len(gone_keys):
+                extra.append(gone_keys)
+            other = (np.concatenate([other_keys, *extra]) if extra
+                     else other_keys)
+            return ChainedTableFilter.build(live_keys, other,
                                             fp_alpha=self.fp_alpha,
                                             seed1=seeds[0], seed2=seeds[1])
         if self.filter_kind == "bloom":
             if self.bits_per_key <= 0:
                 return None
             fpr = max(1e-9, 2.0 ** (-self.bits_per_key * np.log(2)))
-            return BloomFilter.build(keys, float(fpr), seed=seeds[0])
+            phys = (np.concatenate([live_keys, dead_keys])
+                    if len(dead_keys) else live_keys)
+            return BloomFilter.build(phys, float(fpr), seed=seeds[0])
         return None
 
     def flush(self) -> None:
-        """Freeze the memtable into the newest SSTable, build its filter,
-        exclude its keys from older chained filters online, compact if a
-        size-tiered run formed, and refresh the packed bank."""
+        """Freeze the memtable into the newest SSTable, build its filter
+        (live keys only), exclude its keys from older chained filters online
+        — live keys via ``exclude_new`` (stage-1 false positives), deleted
+        keys via ``exclude_deleted`` (true positives too: a tombstone kills
+        every older table's filter for its key) — compact if a size-tiered
+        run formed, and refresh the packed bank."""
         if not len(self._mt_keys):
             return
         # the array memtable IS the sorted, deduped run — drain directly
-        keys, vals = self._mt_keys, self._mt_vals
+        keys, vals, tombs = self._mt_keys, self._mt_vals, self._mt_tombs
         self._mt_keys = np.empty(0, dtype=np.uint64)
         self._mt_vals = np.empty(0, dtype=np.uint64)
-        # one batched stage-2 exclusion per older table (vs per-key inserts)
+        self._mt_tombs = np.empty(0, dtype=bool)
+        if tombs.any():
+            # flush-time GC: a tombstone only earns its SSTable row if some
+            # older table still physically holds the key it shadows
+            dead = keys[tombs]
+            shadowing = np.zeros(len(dead), dtype=bool)
+            for t in self.sstables:
+                shadowing |= t.contains_many(dead)
+            keep = ~tombs.copy()
+            keep[tombs] = shadowing
+            self.stats.tombstones_gced += int(len(dead) - shadowing.sum())
+            keys, vals, tombs = keys[keep], vals[keep], tombs[keep]
+            dead = dead[shadowing]
+        else:
+            dead = np.empty(0, dtype=np.uint64)
+        if not len(keys):
+            return                        # every record was a useless tombstone
+        live = keys[~tombs] if len(dead) else keys
+        # one batched stage-2 exclusion pass per older table (vs per-key)
         for tbl, filt in zip(self.sstables, self.filters):
             if isinstance(filt, ChainedTableFilter):
-                filt.exclude_new(tbl.keys, keys)
+                filt.exclude_new(tbl.keys, live)
+                filt.exclude_deleted(dead)
         other = (np.concatenate([t.keys for t in self.sstables])
                  if self.sstables else np.empty(0, np.uint64))
-        f = self._build_filter(keys, other, self._flush_seeds())
-        self.sstables.insert(0, SSTable(keys, vals))
+        f = self._build_filter(live, dead, other, self._flush_seeds())
+        self.sstables.insert(0, SSTable(keys, vals,
+                                        tombs if len(dead) else None))
         self.filters.insert(0, f)
         self._flush_count += 1
         self.stats.flushes += 1
@@ -250,16 +344,55 @@ class LsmStore:
         cat_v = np.concatenate([
             t.vals if t.vals is not None else np.zeros(len(t.keys), np.uint64)
             for t in run])
+        cat_t = np.concatenate([
+            t.tombs if t.tombs is not None else np.zeros(len(t.keys), bool)
+            for t in run])
         # np.unique keeps the FIRST occurrence → newest-wins shadowing
+        # (a tombstone shadows older live rows of its key inside the run)
         uk, first_idx = np.unique(cat_k, return_index=True)
-        merged = SSTable(uk, cat_v[first_idx])
+        uv, ut = cat_v[first_idx], cat_t[first_idx]
+        # tombstone GC: a surviving tombstone is still needed only while an
+        # OLDER run can physically hold its key; once nothing older remains,
+        # the record — and the key — leave the store for good
+        gced = np.empty(0, dtype=np.uint64)
+        if ut.any():
+            older = self.sstables[j + 1:]
+            tomb_keys = uk[ut]               # probe ONLY the tombstoned rows
+            shadowing_t = np.zeros(len(tomb_keys), dtype=bool)
+            for t in older:
+                shadowing_t |= t.contains_many(tomb_keys)
+            drop = np.zeros(len(uk), dtype=bool)
+            drop[ut] = ~shadowing_t
+            if drop.any():
+                gced = uk[drop]
+                self.stats.tombstones_gced += int(drop.sum())
+                uk, uv, ut = uk[~drop], uv[~drop], ut[~drop]
+        if not len(uk):
+            # the whole run was GC-able tombstones — drop the tables outright
+            self.sstables[i:j + 1] = []
+            self.filters[i:j + 1] = []
+            self._compact_count += 1
+            self.stats.compactions += 1
+            return
+        merged = SSTable(uk, uv, ut if ut.any() else None)
         others = self.sstables[:i] + self.sstables[j + 1:]
         other_keys = (np.concatenate([t.keys for t in others])
                       if others else np.empty(0, np.uint64))
+        # a merged live row may still be shadowed by a tombstone in a NEWER
+        # table (outside the run): it must not enroll as a positive, or the
+        # first-hit probe would resurrect the deleted key from this table
+        shadowed = np.zeros(len(uk), dtype=bool)
+        for t in self.sstables[:i]:
+            if t.tombs is not None and t.tombs.any():
+                shadowed |= _in_sorted(t.keys[t.tombs], uk)
+        live_mask = ~ut & ~shadowed
         # fresh filter, exact over the WHOLE current universe: unlike flush
         # (older keys at build + online exclusions later), every other
         # table already exists, so its keys all land in the negative set.
-        f = self._build_filter(uk, other_keys, self._compact_seeds())
+        # Dead rows = own tombstones + newer-tombstoned live rows; the
+        # just-GC'd keys ride along as negatives-only.
+        f = self._build_filter(uk[live_mask], uk[~live_mask], other_keys,
+                               self._compact_seeds(), gone_keys=gced)
         self.sstables[i:j + 1] = [merged]
         self.filters[i:j + 1] = [f]
         self._compact_count += 1
@@ -325,21 +458,25 @@ class LsmStore:
 
     def _resolve_chained(self, keys, first, found, vals, reads, idx):
         """Chain rule (Fig 11b): read ONLY the newest-first first hit; a miss
-        there proves every other fired filter is a false positive too."""
+        there proves every other fired filter is a false positive too.
+        Tombstone records never fire chained filters (they are excluded at
+        build and by ``exclude_deleted``), but a read landing on one is
+        still resolved as a miss — the key is deleted."""
         n_tables = len(self.sstables)
         hit = first < n_tables
         reads[idx[hit]] = 1
         for t in np.unique(first[hit]):
             sel = first == t
-            contained, v = self.sstables[int(t)].get_many(keys[sel])
-            found[idx[sel]] = contained
+            live, v, _dead = self.sstables[int(t)].get_many(keys[sel])
+            found[idx[sel]] = live
             vals[idx[sel]] = v
         self.stats.sstable_reads += int(hit.sum())
         self.stats.wasted_reads += int(hit.sum() - found[idx].sum())
 
     def _resolve_masked(self, keys, mask, found, vals, reads, idx):
         """Baseline policy (per-table Bloom / no filter): read EVERY fired
-        table newest→oldest until the key is found."""
+        table newest→oldest until the key's newest record turns up — live
+        (found) or tombstone (deleted; STOP, older versions are shadowed)."""
         alive = np.ones(len(keys), dtype=bool)
         for t in range(len(self.sstables)):
             cand = alive & (((mask >> t) & 1) == 1)
@@ -347,12 +484,13 @@ class LsmStore:
                 continue
             reads[idx[cand]] += 1
             self.stats.sstable_reads += int(cand.sum())
-            contained, v = self.sstables[t].get_many(keys[cand])
-            hit_idx = idx[cand][contained]
+            live, v, dead = self.sstables[t].get_many(keys[cand])
+            hit_idx = idx[cand][live]
             found[hit_idx] = True
-            vals[hit_idx] = v[contained]
-            self.stats.wasted_reads += int((~contained).sum())
-            alive[cand] &= ~contained
+            vals[hit_idx] = v[live]
+            resolved = live | dead
+            self.stats.wasted_reads += int((~live).sum())
+            alive[cand] &= ~resolved
 
     def get_batch(self, keys: np.ndarray
                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -367,14 +505,20 @@ class LsmStore:
         self.stats.gets += n
         if n == 0:
             return found, vals, reads
+        resolved = np.zeros(n, dtype=bool)
         if len(self._mt_keys):
             mk = self._mt_keys
             pos = np.minimum(np.searchsorted(mk, keys), len(mk) - 1)
             inmem = mk[pos] == keys
-            vals[inmem] = self._mt_vals[pos[inmem]]
-            found |= inmem
+            # a memtable tombstone RESOLVES the key (deleted, 0 reads) — it
+            # must not fall through to the SSTables, whose stale versions it
+            # shadows; live memtable hits resolve as found
+            live = inmem & ~self._mt_tombs[pos]
+            vals[live] = self._mt_vals[pos[live]]
+            found |= live
+            resolved |= inmem
             self.stats.memtable_hits += int(inmem.sum())
-        rest = ~found
+        rest = ~resolved
         if not rest.any() or not self.sstables:
             return found, vals, reads
         idx = np.flatnonzero(rest)
@@ -392,6 +536,50 @@ class LsmStore:
         f, v, r = self.get_batch(np.array([key], np.uint64))
         return bool(f[0]), int(v[0]), int(r[0])
 
+    # -------------------------------------------------------------- range scan
+    def scan(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Range scan over the half-open window ``[lo, hi)`` -> (keys
+        ascending uint64 [m], values uint64 [m]), live records only.
+        ``hi`` may be 2**64, so ``scan(0, 2**64)`` covers the whole key
+        space including the maximum uint64 key.
+
+        K-way merge across memtable + every SSTable with newest-wins /
+        tombstone masking: sources concatenate newest-first and one
+        ``np.unique`` (keeps the FIRST = newest record per key) resolves
+        shadowing, then tombstoned survivors drop out. Filters cannot prune
+        a range — a window is not a key — but each sorted run's min/max
+        fences can: tables whose span misses the window are never sliced."""
+        lo_u, hi_u = int(lo), int(hi)
+        if not (0 <= lo_u < 2 ** 64 and 0 <= hi_u <= 2 ** 64):
+            raise ValueError("scan bounds: 0 <= lo < 2**64, 0 <= hi <= 2**64")
+        self.stats.scans += 1
+        parts_k, parts_v, parts_t = [], [], []
+        if lo_u < hi_u:
+            if len(self._mt_keys):
+                # the memtable IS a sorted run — reuse the SSTable slicer
+                # (single home for the window-boundary logic, 2**64 incl.)
+                mt = SSTable(self._mt_keys, self._mt_vals, self._mt_tombs)
+                ks, vs, ts = mt.slice_range(lo_u, hi_u)
+                if len(ks):
+                    parts_k.append(ks)
+                    parts_v.append(vs)
+                    parts_t.append(ts)
+            for t in self.sstables:                       # newest → oldest
+                if not t.overlaps_range(lo_u, hi_u):
+                    self.stats.scan_tables_pruned += 1
+                    continue
+                self.stats.scan_tables_read += 1
+                ks, vs, ts = t.slice_range(lo_u, hi_u)
+                parts_k.append(ks)
+                parts_v.append(vs)
+                parts_t.append(ts)
+        if not parts_k:
+            return np.empty(0, np.uint64), np.empty(0, np.uint64)
+        cat_k = np.concatenate(parts_k)
+        uk, first_idx = np.unique(cat_k, return_index=True)
+        live = ~np.concatenate(parts_t)[first_idx]
+        return uk[live], np.concatenate(parts_v)[first_idx][live]
+
     # ------------------------------------------------------------- accounting
     @property
     def n_tables(self) -> int:
@@ -399,11 +587,17 @@ class LsmStore:
 
     @property
     def key_count(self) -> int:
-        """Distinct keys across memtable + SSTables (upper bound: shadowed
-        duplicates across tables count once via the newest table)."""
-        seen = np.unique(np.concatenate(
-            [t.keys for t in self.sstables] or [np.empty(0, np.uint64)]))
-        return int(len(np.union1d(seen, self._mt_keys)))
+        """Distinct LIVE keys across memtable + SSTables: each key counts by
+        its newest record, and a newest-record tombstone means gone."""
+        parts_k = [self._mt_keys] + [t.keys for t in self.sstables]
+        parts_t = [self._mt_tombs] + [
+            t.tombs if t.tombs is not None else np.zeros(len(t.keys), bool)
+            for t in self.sstables]
+        cat_k = np.concatenate(parts_k)
+        if not len(cat_k):
+            return 0
+        uk, first_idx = np.unique(cat_k, return_index=True)
+        return int((~np.concatenate(parts_t)[first_idx]).sum())
 
     @property
     def filter_bits(self) -> int:

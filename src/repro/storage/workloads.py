@@ -1,10 +1,15 @@
-"""Deterministic point-query workload generators + §5.4 latency accounting.
+"""Deterministic CRUD workload generators + §5.4 latency accounting.
 
 Workloads are materialized up front as a list of ``WorkloadOp`` batches
 (seeded — the same arguments always produce the same traffic), so a store
 under test and a host-side reference model can replay identical streams.
+Every generator draws each decision stream (op-kind coin flips, key draws,
+range endpoints) from its OWN independently seeded
+``np.random.Generator``, so the keys of phase N are reproducible even when
+an earlier phase's consumption pattern changes — the property differential
+runs rely on to replay traffic piecewise.
 
-Three shapes, mirroring the YCSB-style mixes LSM papers benchmark:
+Four shapes, mirroring the YCSB-style mixes LSM papers benchmark:
 
 - ``uniform_write_heavy``   — mostly puts over a uniform key space; the
   flush/compaction write-amplification exerciser.
@@ -13,6 +18,9 @@ Three shapes, mirroring the YCSB-style mixes LSM papers benchmark:
 - ``mixed_read_write``      — interleaved puts/gets where a configurable
   fraction of gets miss the store entirely; the ChainedFilter headline
   case (misses are where the ≤ 1 wasted-read rule pays).
+- ``crud_mixed``            — full put/get/delete/scan traffic; the
+  tombstone-exclusion and fence-pruning exerciser (deleted keys must cost
+  0 reads on a chained store, ranges prune by min/max fences).
 
 ``LatencyAccountant`` converts per-get SSTable read counts to microseconds
 with the calibrated ``core.lsm.latency_model`` and reports the Fig-12
@@ -20,6 +28,7 @@ percentiles.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -29,9 +38,11 @@ from repro.core.lsm import latency_model
 
 @dataclass(frozen=True)
 class WorkloadOp:
-    kind: str                       # 'put' | 'get'
-    keys: np.ndarray                # uint64 [batch]
+    kind: str                       # 'put' | 'get' | 'del' | 'scan'
+    keys: np.ndarray                # uint64 [batch] (empty for scans)
     vals: np.ndarray | None = None  # uint64 [batch] for puts
+    lo: int = 0                     # scan window [lo, hi)
+    hi: int = 0
 
 
 def _key_universe(n: int, seed: int) -> np.ndarray:
@@ -50,21 +61,33 @@ def _zipf_weights(n: int, theta: float) -> np.ndarray:
     return w / w.sum()
 
 
+def _phase_rngs(seed: int, *phases: str) -> tuple[np.random.Generator, ...]:
+    """One independently seeded ``np.random.Generator`` per named stream.
+    Consuming from one stream never perturbs another, so (e.g.) the key
+    draws of a get phase replay identically whatever the op-kind coin
+    flips did — the per-phase reproducibility contract differential runs
+    depend on. Stream names enter the seed through crc32, NOT ``hash()``
+    (whose per-process salt would silently break cross-process replay and
+    the benchmark regression baselines)."""
+    return tuple(np.random.default_rng([seed, zlib.crc32(p.encode())])
+                 for p in phases)
+
+
 def uniform_write_heavy(n_ops: int, batch: int = 256, read_frac: float = 0.1,
                         seed: int = 0) -> list[WorkloadOp]:
     """~90% puts of fresh uniform keys, ~10% gets of already-written keys."""
-    rng = np.random.default_rng(seed + 1)
+    rng_kind, rng_keys = _phase_rngs(seed + 1, "kind", "keys")
     universe = _key_universe(n_ops * batch, seed)
     ops: list[WorkloadOp] = []
     cursor = 0
     for _ in range(n_ops):
-        if cursor == 0 or rng.random() >= read_frac:
+        if cursor == 0 or rng_kind.random() >= read_frac:
             keys = universe[cursor:cursor + batch]
             ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
             cursor += batch
         else:
             ops.append(WorkloadOp(
-                "get", rng.choice(universe[:cursor], size=batch)))
+                "get", rng_keys.choice(universe[:cursor], size=batch)))
     return ops
 
 
@@ -72,8 +95,11 @@ def zipfian_read_heavy(n_ops: int, batch: int = 256, n_keys: int = 8192,
                        write_frac: float = 0.05, theta: float = 1.1,
                        seed: int = 0) -> list[WorkloadOp]:
     """Load ``n_keys`` once, then ~95% gets with Zipf(θ) popularity (rank =
-    insertion order) and ~5% overwrites of the same hot ranks."""
-    rng = np.random.default_rng(seed + 2)
+    insertion order) and ~5% overwrites of the same hot ranks. The op-kind
+    coin flips and the Zipf key draws are separate seeded streams: the i-th
+    mixed-phase key batch is a pure function of (seed, i), whatever mix of
+    gets and overwrites preceded it."""
+    rng_kind, rng_keys = _phase_rngs(seed + 2, "kind", "keys")
     universe = _key_universe(n_keys, seed)
     weights = _zipf_weights(n_keys, theta)
     ops: list[WorkloadOp] = []
@@ -81,8 +107,8 @@ def zipfian_read_heavy(n_ops: int, batch: int = 256, n_keys: int = 8192,
         keys = universe[start:start + batch]
         ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
     for _ in range(n_ops):
-        keys = rng.choice(universe, size=batch, p=weights)
-        if rng.random() < write_frac:
+        keys = rng_keys.choice(universe, size=batch, p=weights)
+        if rng_kind.random() < write_frac:
             ops.append(WorkloadOp("put", keys, keys + np.uint64(1)))
         else:
             ops.append(WorkloadOp("get", keys))
@@ -94,23 +120,62 @@ def mixed_read_write(n_ops: int, batch: int = 256, read_frac: float = 0.5,
                      ) -> list[WorkloadOp]:
     """Interleaved puts/gets; ``miss_frac`` of each get batch draws keys
     that were NEVER inserted (the wasted-read / tail-latency probe)."""
-    rng = np.random.default_rng(seed + 3)
+    rng_kind, rng_keys = _phase_rngs(seed + 3, "kind", "keys")
     universe = _key_universe(2 * n_ops * batch, seed)
     present, absent = universe[::2], universe[1::2]   # disjoint by parity
     ops: list[WorkloadOp] = []
     cursor = 0
     for _ in range(n_ops):
-        if cursor == 0 or rng.random() >= read_frac:
+        if cursor == 0 or rng_kind.random() >= read_frac:
             keys = present[cursor:cursor + batch]
             ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
             cursor += batch
         else:
             n_miss = int(round(batch * miss_frac))
-            hits = rng.choice(present[:cursor], size=batch - n_miss)
-            misses = rng.choice(absent, size=n_miss, replace=False)
+            hits = rng_keys.choice(present[:cursor], size=batch - n_miss)
+            misses = rng_keys.choice(absent, size=n_miss, replace=False)
             keys = np.concatenate([hits, misses])
-            rng.shuffle(keys)
+            rng_keys.shuffle(keys)
             ops.append(WorkloadOp("get", keys))
+    return ops
+
+
+def crud_mixed(n_ops: int, batch: int = 256, read_frac: float = 0.35,
+               delete_frac: float = 0.15, scan_frac: float = 0.1,
+               scan_span: float = 0.05, seed: int = 0) -> list[WorkloadOp]:
+    """Full-CRUD traffic: puts of fresh keys, gets over written keys,
+    deletes of a trailing window of written keys, and range scans whose
+    window covers ``scan_span`` of the key space (narrow enough that
+    min/max fences prune most tables). Each decision stream (op kind, key
+    draws, scan endpoints) has its own seeded generator."""
+    rng_kind, rng_keys, rng_rng = _phase_rngs(seed + 4, "kind", "keys",
+                                              "ranges")
+    universe = np.sort(_key_universe(n_ops * batch, seed))
+    ops: list[WorkloadOp] = []
+    cursor = 0
+    deleted_to = 0           # prefix of written keys already deleted
+    for _ in range(n_ops):
+        r = rng_kind.random()
+        if cursor == 0 or r >= read_frac + delete_frac + scan_frac:
+            keys = universe[cursor:cursor + batch]
+            ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
+            cursor += batch
+        elif r < read_frac:
+            ops.append(WorkloadOp(
+                "get", rng_keys.choice(universe[:cursor], size=batch)))
+        elif r < read_frac + delete_frac and deleted_to + batch <= cursor:
+            keys = universe[deleted_to:deleted_to + batch]
+            ops.append(WorkloadOp("del", keys))
+            deleted_to += batch
+        else:
+            # window over the WRITTEN region (live data), sized as a
+            # fraction of the full key space
+            span = max(1, int(len(universe) * scan_span))
+            a = int(rng_rng.integers(0, max(1, cursor - span)))
+            ops.append(WorkloadOp("scan", np.empty(0, np.uint64),
+                                  lo=int(universe[a]),
+                                  hi=int(universe[min(a + span,
+                                                      len(universe) - 1)])))
     return ops
 
 
@@ -149,9 +214,15 @@ def run_workload(store, ops: list[WorkloadOp],
     totals."""
     accountant = accountant or LatencyAccountant()
     n_found = n_get = 0
+    n_scanned = 0
     for op in ops:
         if op.kind == "put":
             store.put_batch(op.keys, op.vals)
+        elif op.kind == "del":
+            store.delete_batch(op.keys)
+        elif op.kind == "scan":
+            ks, _ = store.scan(op.lo, op.hi)
+            n_scanned += len(ks)
         else:
             found, _, reads = store.get_batch(op.keys)
             accountant.record(reads)
@@ -159,4 +230,5 @@ def run_workload(store, ops: list[WorkloadOp],
             n_get += len(op.keys)
     out = accountant.report()
     out["hit_rate"] = n_found / max(1, n_get)
+    out["scanned_keys"] = n_scanned
     return out

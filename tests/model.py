@@ -1,0 +1,82 @@
+"""Trivially-correct reference model for differential testing of LsmStore.
+
+``ReferenceStore`` is the oracle the stateful suite (test_differential.py)
+drives in lockstep with the batched engine: a plain Python dict plus a
+sorted key array rebuilt on demand. No memtable, no SSTables, no filters,
+no tombstones — ``flush``/``compact`` are semantic no-ops, deletes remove
+the key outright — so any disagreement with ``repro.storage.LsmStore``
+(whose flush/compact/GC machinery must be *observationally invisible*) is
+a bug in the engine, not the model.
+
+The op surface mirrors the store exactly: within-batch newest-wins for
+puts, half-open ``[lo, hi)`` range scans returning ascending keys.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReferenceStore:
+    """dict + sorted-keys oracle for put/delete/get/scan."""
+
+    def __init__(self):
+        self._data: dict[int, int] = {}
+        self._sorted: np.ndarray | None = None   # lazy cache
+
+    # ------------------------------------------------------------ write path
+    def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None
+                  ) -> None:
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = (np.zeros(len(keys), dtype=np.uint64) if values is None
+                  else np.asarray(values, dtype=np.uint64))
+        # iteration order IS newest-wins: later writes overwrite earlier ones
+        for k, v in zip(keys.tolist(), values.tolist()):
+            self._data[k] = v
+        self._sorted = None
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        for k in np.asarray(keys, dtype=np.uint64).tolist():
+            self._data.pop(k, None)
+        self._sorted = None
+
+    def flush(self) -> None:        # semantic no-op — state is already flat
+        pass
+
+    def compact(self) -> None:      # semantic no-op
+        pass
+
+    # ------------------------------------------------------------- read path
+    def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(found bool [n], values uint64 [n]) — values 0 where absent."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        found = np.zeros(len(keys), dtype=bool)
+        vals = np.zeros(len(keys), dtype=np.uint64)
+        for i, k in enumerate(keys.tolist()):
+            v = self._data.get(k)
+            if v is not None:
+                found[i] = True
+                vals[i] = v
+        return found, vals
+
+    def scan(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Half-open [lo, hi) -> (keys ascending uint64, values uint64).
+        ``hi`` may be 2**64 (window end-inclusive of the max uint64 key)."""
+        ks = self.keys_sorted
+        a = int(np.searchsorted(ks, np.uint64(lo)))
+        b = (len(ks) if hi >= 2 ** 64
+             else int(np.searchsorted(ks, np.uint64(hi))))
+        window = ks[a:b] if b > a else np.empty(0, np.uint64)
+        vals = np.array([self._data[int(k)] for k in window], dtype=np.uint64)
+        return window, vals.reshape(-1)
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def keys_sorted(self) -> np.ndarray:
+        if self._sorted is None:
+            self._sorted = np.sort(
+                np.fromiter(self._data.keys(), dtype=np.uint64,
+                            count=len(self._data)))
+        return self._sorted
+
+    def __len__(self) -> int:
+        return len(self._data)

@@ -1,0 +1,190 @@
+"""Stateful differential suite: LsmStore vs the ReferenceStore oracle.
+
+Random interleavings of put / delete / get / scan / flush / compact are
+fired at the batched engine and the trivially-correct dict model in
+lockstep (tests/model.py); every get and scan must agree **bit-exactly**
+— found flags, values, scan windows — for all three filter kinds
+(``chained`` / ``bloom`` / ``none``). This is the harness that proves the
+tombstone-delete and range-scan machinery (flush-time exclusions,
+compaction GC, fence pruning, newest-wins masking) is observationally
+invisible.
+
+Each interleaving is derived from ONE integer seed (hypothesis-drawn), so
+a failure is replayable from the ``kind=... seed=... step=...`` tag every
+assertion carries. The fast lane runs a bounded example budget per kind;
+the ``slow``-marked suite runs the full 500 randomized interleavings per
+filter kind (nightly lane).
+
+Chained stores additionally assert after every final flush:
+
+- the ≤ 1 SSTable-read bound on every get (the paper's §5.4 contract);
+- the exclusion-set invariant: no key that is deleted (and not since
+  re-inserted) remains ENROLLED as a stage-2 positive in ANY table's
+  filter — tombstones must never burn filter space or short-circuit the
+  fused probe's first-hit mask.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.storage import LsmStore
+
+from model import ReferenceStore
+
+KIND_IDX = {"chained": 0, "bloom": 1, "none": 2}
+
+_UNIVERSE = H.random_keys(768, seed=71)
+POOL = _UNIVERSE[:512]          # keys ops draw from
+ABSENT = _UNIVERSE[512:]        # never written by any op (miss traffic)
+
+FULL_RANGE = (0, 2 ** 64)     # hi == 2**64 includes the max uint64 key
+
+
+def _mixed_keys(rng, n, absent_frac=0.25):
+    n_abs = int(round(n * absent_frac))
+    parts = [rng.choice(POOL, size=n - n_abs)]
+    if n_abs:
+        parts.append(rng.choice(ABSENT, size=n_abs))
+    ks = np.concatenate(parts)
+    rng.shuffle(ks)
+    return ks
+
+
+def _scan_bounds(rng):
+    if rng.random() < 0.15:
+        return FULL_RANGE
+    a, b = np.sort(rng.choice(POOL, size=2, replace=False))
+    return int(a), int(b) + int(rng.random() < 0.5)
+
+
+def _check_scan(store, model, lo, hi, msg):
+    got_k, got_v = store.scan(lo, hi)
+    exp_k, exp_v = model.scan(lo, hi)
+    np.testing.assert_array_equal(got_k, exp_k, err_msg=f"{msg} scan keys")
+    np.testing.assert_array_equal(got_v, exp_v, err_msg=f"{msg} scan vals")
+
+
+def _check_get(store, model, keys, msg):
+    found, vals, reads = store.get_batch(keys)
+    exp_found, exp_vals = model.get_batch(keys)
+    np.testing.assert_array_equal(found, exp_found, err_msg=f"{msg} found")
+    np.testing.assert_array_equal(vals, exp_vals, err_msg=f"{msg} vals")
+    if store.filter_kind == "chained":
+        assert (reads <= 1).all(), f"{msg}: chained read bound violated"
+
+
+def _assert_exclusion_sets(store, model, ever_deleted, msg):
+    """White-box: deleted-and-gone keys are enrolled as a positive NOWHERE.
+    Valid on flushed state only (memtable tombstones haven't touched the
+    filters yet) — callers flush first."""
+    gone = np.array(
+        sorted(ever_deleted - set(model.keys_sorted.tolist())),
+        dtype=np.uint64)
+    if not len(gone):
+        return
+    for t, filt in enumerate(store.filters):
+        enrolled = np.intersect1d(filt.f2.positive_keys, gone)
+        assert enrolled.size == 0, (
+            f"{msg}: table {t} still enrolls deleted keys {enrolled[:5]}")
+
+
+def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
+                     get_cap: int = 48) -> None:
+    """Replay one seeded random interleaving against store + oracle."""
+    rng = np.random.default_rng([seed, KIND_IDX[filter_kind]])
+    store = LsmStore(
+        filter_kind=filter_kind,
+        bits_per_key=float(rng.choice([6.0, 10.0])),
+        fp_alpha=int(rng.choice([6, 8])),
+        seed=int(rng.integers(0, 1024)),
+        memtable_capacity=int(rng.choice([48, 96, 1 << 30])),
+        compact_min_run=int(rng.choice([2, 3])),
+        compact_size_ratio=float(rng.choice([2.0, 4.0, 64.0])),
+        auto_compact=bool(rng.random() < 0.7))
+    model = ReferenceStore()
+    ever_deleted: set[int] = set()
+    n_steps = int(rng.integers(6, max_steps + 1))
+    ops = rng.choice(
+        ["put", "delete", "get", "scan", "flush", "compact"],
+        size=n_steps, p=[0.30, 0.18, 0.22, 0.12, 0.12, 0.06])
+    for step, op in enumerate(ops):
+        msg = f"[differential kind={filter_kind} seed={seed} step={step} op={op}]"
+        if op == "put":
+            ks = rng.choice(POOL, size=int(rng.integers(1, 40)))
+            vs = rng.integers(1, 2 ** 63, size=len(ks), dtype=np.uint64)
+            store.put_batch(ks, vs)
+            model.put_batch(ks, vs)
+        elif op == "delete":
+            ks = _mixed_keys(rng, int(rng.integers(1, 24)), absent_frac=0.15)
+            store.delete_batch(ks)
+            model.delete_batch(ks)
+            ever_deleted.update(ks.tolist())
+        elif op == "get":
+            _check_get(store, model,
+                       _mixed_keys(rng, int(rng.integers(1, get_cap))), msg)
+        elif op == "scan":
+            lo, hi = _scan_bounds(rng)
+            _check_scan(store, model, lo, hi, msg)
+        elif op == "flush":
+            store.flush()
+            model.flush()
+        else:
+            store.compact()
+            model.compact()
+    # final sweep on fully-flushed state: total point/range agreement plus
+    # the chained exclusion-set invariant
+    msg = f"[differential kind={filter_kind} seed={seed} final]"
+    store.flush()
+    _check_get(store, model, _UNIVERSE, msg)
+    _check_scan(store, model, *FULL_RANGE, msg)
+    if filter_kind == "chained":
+        _assert_exclusion_sets(store, model, ever_deleted, msg)
+
+
+# ------------------------------------------------------------ fast CI lane
+# bounded example budget per kind — the nightly slow lane runs the full 500
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_differential_chained_fast(seed):
+    run_differential("chained", seed)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=8, deadline=None)
+def test_differential_bloom_fast(seed):
+    run_differential("bloom", seed)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=8, deadline=None)
+def test_differential_none_fast(seed):
+    run_differential("none", seed)
+
+
+# ------------------------------------------------------- nightly slow lane
+# >= 500 randomized interleavings per filter kind (acceptance bar); shorter
+# interleavings keep the wall clock bounded while op coverage stays full
+
+import pytest  # noqa: E402
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=500, deadline=None)
+def test_differential_chained_500(seed):
+    run_differential("chained", seed, max_steps=12, get_cap=32)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=500, deadline=None)
+def test_differential_bloom_500(seed):
+    run_differential("bloom", seed, max_steps=12, get_cap=32)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=500, deadline=None)
+def test_differential_none_500(seed):
+    run_differential("none", seed, max_steps=12, get_cap=32)

@@ -17,7 +17,7 @@ from repro.kernels.lsm_probe import lsm_probe
 from repro.serving.filter_service import FilterBank, FilterService
 from repro.storage import (LsmStore, LatencyAccountant, mixed_read_write,
                            uniform_write_heavy, zipfian_read_heavy,
-                           run_workload)
+                           crud_mixed, run_workload)
 
 KEYS = H.random_keys(50_000, seed=29)
 
@@ -41,13 +41,24 @@ def test_sstable_contains_many_and_get_many():
     got = t.contains_many(q)
     exp = np.isin(q, keys)
     np.testing.assert_array_equal(got, exp)
-    hit, v = t.get_many(q)
+    hit, v, dead = t.get_many(q)
     np.testing.assert_array_equal(hit, exp)
     np.testing.assert_array_equal(v[hit], q[hit] >> np.uint64(9))
     assert (v[~hit] == 0).all()
+    assert not dead.any()                     # no tombstones in this table
+    # tombstoned rows report dead (and no value), not live
+    tombs = np.zeros(len(keys), dtype=bool)
+    tombs[::3] = True
+    td = SSTable(keys, vals, tombs)
+    live, v2, dead2 = td.get_many(q)
+    np.testing.assert_array_equal(dead2, exp & np.isin(q, keys[tombs]))
+    np.testing.assert_array_equal(live, exp & ~dead2)
+    assert (v2[dead2] == 0).all()
     # empty table edge
     empty = SSTable(np.empty(0, np.uint64))
     assert not empty.contains_many(q).any()
+    l0, _, d0 = empty.get_many(q)
+    assert not l0.any() and not d0.any()
 
 
 # ----------------------------------------------------- Othello packed tables
@@ -296,18 +307,259 @@ def test_get_batch_empty_and_cold():
     assert not found.any() and (reads == 0).all()
 
 
+# ----------------------------------------------- tombstone deletes + scans
+def _filled_store(seed=31, kind="chained", **kw):
+    kw.setdefault("memtable_capacity", 10 ** 9)
+    kw.setdefault("auto_compact", False)
+    store = LsmStore(filter_kind=kind, seed=seed,
+                     bits_per_key=8.0 if kind == "bloom" else 10.0, **kw)
+    a, b = np.sort(KEYS[:300]), np.sort(KEYS[300:600])
+    store.put_batch(a, a + np.uint64(1))
+    store.flush()
+    store.put_batch(b, b + np.uint64(2))
+    store.flush()
+    return store, a, b
+
+
+def test_lsm_probe_ignores_tombstone_only_tables():
+    """Kernel boundary (interpret=True): a table whose ONLY physical match
+    for a key is a tombstone must contribute neither its hits_mask bit nor
+    the first-hit index — the deleted key's exclusion happens at filter
+    build/update time and the fused kernel must observe it."""
+    store, a, b = _filled_store(seed=41)
+    dels = np.concatenate([a[:80], b[:40]])
+    store.delete_batch(dels)
+    store.flush()                       # tombstone-only newest table
+    assert store.n_tables == 3
+    assert store.sstables[0].tombs is not None and store.sstables[0].tombs.all()
+    # straight through the fused kernel, same call probe_batch makes
+    hi, lo = H.np_split_u64(dels)
+    hi2d, lo2d, n = common.blockify(hi, lo)
+    first, mask = lsm_probe(store._tables_dev, hi2d, lo2d,
+                            chains=store._chains, interpret=True)
+    first = np.asarray(common.unblockify(first, n))
+    mask = np.asarray(common.unblockify(mask, n))
+    assert (mask == 0).all()            # no table's filter fires at all
+    assert (first == store.n_tables).all()
+    # live keys still first-hit their owning tables
+    live = np.concatenate([a[80:], b[40:]])
+    first2, _ = store.probe_batch(live)
+    np.testing.assert_array_equal(
+        first2, np.where(np.isin(live, b), 1, 2))   # 0 = tombstone table
+
+
+def test_delete_get_agrees_with_model_and_read_bound():
+    from model import ReferenceStore
+    store, a, b = _filled_store(seed=42)
+    model = ReferenceStore()
+    model.put_batch(a, a + np.uint64(1))
+    model.put_batch(b, b + np.uint64(2))
+    dels = np.concatenate([a[::3], b[::5]])
+    store.delete_batch(dels)
+    model.delete_batch(dels)
+    q = np.concatenate([a, b, KEYS[5000:5500]])
+    found, vals, reads = store.get_batch(q)       # memtable tombstones
+    exp_found, exp_vals = model.get_batch(q)
+    np.testing.assert_array_equal(found, exp_found)
+    np.testing.assert_array_equal(vals, exp_vals)
+    store.flush()                                 # flushed tombstones
+    found, vals, reads = store.get_batch(q)
+    np.testing.assert_array_equal(found, exp_found)
+    np.testing.assert_array_equal(vals, exp_vals)
+    assert (reads <= 1).all()                     # §5.4 bound survives deletes
+    assert (reads[np.isin(q, dels)] == 0).all()   # deleted keys fire nothing
+
+
+def test_filters_never_enroll_tombstoned_keys():
+    """exclude_new / ChainedTableFilter.build / exclude_deleted invariant:
+    a tombstoned key is enrolled as a stage-2 POSITIVE in no table."""
+    store, a, b = _filled_store(seed=43)
+    dels = np.concatenate([a[:150], b[:60]])
+    store.delete_batch(dels)
+    store.flush()
+    for t, filt in enumerate(store.filters):
+        assert not np.intersect1d(filt.f2.positive_keys, dels).size, t
+    # direct build: dead keys passed as negatives can never fire
+    f = ChainedTableFilter.build(a, np.concatenate([b, dels]),
+                                 seed1=3, seed2=4)
+    assert not f.query(dels[np.isin(dels, b)]).any()
+    # direct exclude_deleted: kills OWN keys (true positives) too
+    f2 = ChainedTableFilter.build(a, b, seed1=5, seed2=6)
+    assert f2.query(a[:50]).all()
+    f2.exclude_deleted(a[:50])
+    assert not f2.query(a[:50]).any()
+    assert f2.query(a[50:]).all()                 # untouched keys unaffected
+    assert not np.intersect1d(f2.f2.positive_keys, a[:50]).size
+
+
+def test_compaction_gc_invariants():
+    """After full compaction to one run: no tombstone records remain, store
+    contents equal the reference model, and total filter bits SHRINK (the
+    deleted keys no longer burn filter space)."""
+    from model import ReferenceStore
+    store, a, b = _filled_store(seed=44, compact_min_run=2,
+                                compact_size_ratio=1e9)
+    model = ReferenceStore()
+    model.put_batch(a, a + np.uint64(1))
+    model.put_batch(b, b + np.uint64(2))
+    bits_before = store.filter_bits
+    dels = np.concatenate([a[:200], b[:200]])
+    store.delete_batch(dels)
+    model.delete_batch(dels)
+    store.flush()
+    store.compact()
+    assert store.n_tables == 1
+    t = store.sstables[0]
+    assert t.tombs is None or not t.tombs.any()   # GC ate every tombstone
+    assert store.stats.tombstones_gced == len(dels)
+    assert not np.isin(t.keys, dels).any()        # records gone, not masked
+    assert store.filter_bits < bits_before        # fewer keys -> fewer bits
+    assert store.key_count == len(model)
+    ks, vs = store.scan(0, 2 ** 64 - 1)
+    ek, ev = model.scan(0, 2 ** 64 - 1)
+    np.testing.assert_array_equal(ks, ek)
+    np.testing.assert_array_equal(vs, ev)
+    found, vals, reads = store.get_batch(np.concatenate([a, b]))
+    ef, ev2 = model.get_batch(np.concatenate([a, b]))
+    np.testing.assert_array_equal(found, ef)
+    np.testing.assert_array_equal(vals, ev2)
+    assert (reads <= 1).all()
+    # deleted keys are fully GC'd AND pinned negatives: they fire nothing
+    first, mask = store.probe_batch(dels)
+    assert (first == store.n_tables).all() and (mask == 0).all()
+
+
+def test_useless_tombstones_gc_at_flush():
+    """Deleting never-written keys leaves no SSTable rows behind."""
+    store = LsmStore(seed=45, memtable_capacity=10 ** 9)
+    store.delete_batch(KEYS[:64])
+    store.flush()
+    assert store.n_tables == 0                    # nothing worth freezing
+    assert store.stats.tombstones_gced == 64
+    ks = np.sort(KEYS[100:200])
+    store.put_batch(ks, ks)
+    store.flush()
+    store.delete_batch(KEYS[:64])                 # still absent
+    store.delete_batch(ks[:10])                   # these DO shadow
+    store.flush()
+    assert store.n_tables == 2
+    newest = store.sstables[0]
+    np.testing.assert_array_equal(newest.keys, ks[:10])
+    assert newest.tombs.all()
+
+
+def test_scan_fences_and_newest_wins():
+    store = LsmStore(seed=46, memtable_capacity=10 ** 9, auto_compact=False)
+    lo_run = np.sort(KEYS[:200])
+    hi_run = np.sort(KEYS[200:400])
+    store.put_batch(lo_run, lo_run)
+    store.flush()
+    store.put_batch(hi_run, hi_run)
+    store.flush()
+    # overwrite some keys (newer table wins) + delete some (masked out)
+    over = lo_run[:50]
+    store.put_batch(over, over + np.uint64(9))
+    store.delete_batch(lo_run[50:80])
+    store.flush()
+    ks, vs = store.scan(0, 2 ** 64 - 1)
+    expect = {int(k): int(k) for k in np.concatenate([lo_run, hi_run])}
+    for k in over:
+        expect[int(k)] = int(k) + 9
+    for k in lo_run[50:80]:
+        del expect[int(k)]
+    np.testing.assert_array_equal(ks, np.sort(np.array(list(expect), np.uint64)))
+    np.testing.assert_array_equal(vs, [expect[int(k)] for k in ks])
+    # fence pruning: a window entirely inside one run never slices the other
+    pruned0 = store.stats.scan_tables_pruned
+    t0 = store.sstables[1]                       # the hi_run table (index 1)
+    sub_lo, sub_hi = int(t0.keys[10]), int(t0.keys[40])
+    ks2, _ = store.scan(sub_lo, sub_hi)
+    assert store.stats.scan_tables_pruned > pruned0
+    assert ((ks2 >= sub_lo) & (ks2 < sub_hi)).all()
+    # empty + inverted windows
+    k0, _ = store.scan(5, 5)
+    assert len(k0) == 0
+    k1, _ = store.scan(int(hi_run[-1]) + 1, int(hi_run[-1]) + 2)
+    assert len(k1) == 0
+
+
+def test_scan_reaches_max_uint64_key():
+    """hi == 2**64 makes the window cover the maximum key — the one record
+    a [lo, hi) window with uint64 bounds could never include."""
+    top = np.uint64(2 ** 64 - 1)
+    store = LsmStore(seed=48, memtable_capacity=10 ** 9)
+    ks = np.sort(np.concatenate([KEYS[:50], [top]]))
+    store.put_batch(ks, ks)
+    store.flush()
+    full_k, full_v = store.scan(0, 2 ** 64)
+    np.testing.assert_array_equal(full_k, ks)
+    assert full_k[-1] == top
+    part_k, _ = store.scan(0, 2 ** 64 - 1)        # exclusive: top dropped
+    np.testing.assert_array_equal(part_k, ks[:-1])
+    with pytest.raises(ValueError):
+        store.scan(0, 2 ** 64 + 1)
+    store.delete(int(top))
+    store.flush()
+    gone_k, _ = store.scan(0, 2 ** 64)
+    np.testing.assert_array_equal(gone_k, ks[:-1])
+
+
+def test_memtable_tombstone_costs_zero_reads():
+    store, a, b = _filled_store(seed=47)
+    store.delete_batch(a[:20])
+    f, v, r = store.get_batch(a[:20])
+    assert not f.any() and (r == 0).all() and (v == 0).all()
+    # re-insert resurrects through the memtable at 0 reads
+    store.put_batch(a[:5], a[:5] + np.uint64(3))
+    f, v, r = store.get_batch(a[:5])
+    assert f.all() and (r == 0).all()
+    np.testing.assert_array_equal(v, a[:5] + np.uint64(3))
+
+
 # ---------------------------------------------------------------- workloads
 @pytest.mark.parametrize("gen", [uniform_write_heavy, zipfian_read_heavy,
-                                 mixed_read_write])
+                                 mixed_read_write, crud_mixed])
 def test_workloads_deterministic(gen):
     a, b = gen(12, batch=64, seed=21), gen(12, batch=64, seed=21)
     assert len(a) == len(b)
     for x, y in zip(a, b):
         assert x.kind == y.kind
         np.testing.assert_array_equal(x.keys, y.keys)
+        assert (x.lo, x.hi) == (y.lo, y.hi)
     c = gen(12, batch=64, seed=22)
     assert any((x.keys != y.keys).any() for x, y in zip(a, c)
-               if len(x.keys) == len(y.keys))
+               if x.kind != "scan" and len(x.keys) == len(y.keys))
+
+
+def test_workload_phases_have_independent_streams():
+    """Per-phase RNG split: the i-th mixed-phase KEY batch must be a pure
+    function of (seed, i) — changing the op-kind mix (write_frac) must not
+    reshuffle which keys get drawn."""
+    a = zipfian_read_heavy(16, batch=32, n_keys=256, write_frac=0.0, seed=9)
+    b = zipfian_read_heavy(16, batch=32, n_keys=256, write_frac=1.0, seed=9)
+    mixed_a = [op for op in a if op.kind in ("get", "put")][256 // 32:]
+    mixed_b = [op for op in b if op.kind in ("get", "put")][256 // 32:]
+    assert [op.kind for op in mixed_a] != [op.kind for op in mixed_b]
+    for x, y in zip(mixed_a, mixed_b):
+        np.testing.assert_array_equal(x.keys, y.keys)
+
+
+def test_run_workload_crud_mixed():
+    store = LsmStore(seed=10, memtable_capacity=256, compact_min_run=3)
+    ops = crud_mixed(30, batch=96, seed=6)
+    kinds = {op.kind for op in ops}
+    assert kinds >= {"put", "del", "scan"}
+    rep = run_workload(store, ops, LatencyAccountant())
+    assert store.stats.deletes > 0 and store.stats.scans > 0
+    assert rep["scanned_keys"] > 0
+    if rep["n"]:
+        assert rep["max_reads"] <= 1          # chained bound under deletes
+    # deleted prefix really is gone
+    deleted = np.concatenate(
+        [op.keys for op in ops if op.kind == "del"])
+    found, _, reads = store.get_batch(deleted)
+    assert not found.any()
+    assert (reads <= 1).all()
 
 
 def test_run_workload_reports_percentiles():
