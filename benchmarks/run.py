@@ -26,7 +26,7 @@ def main() -> int:
 
     from . import (chain_rule, static_dictionary, huffman, adaptive_hashing,
                    lsm_pointquery, lsm_store, learned_filter, roofline,
-                   filter_service, write_path, scan_delete)
+                   filter_service, write_path, scan_delete, snapshot_compact)
     benches = [
         ("chain_rule (§2)", chain_rule.run),
         ("static_dictionary (§5.1, Fig 6/7)", static_dictionary.run),
@@ -36,6 +36,8 @@ def main() -> int:
         ("lsm_store (batched storage engine)", lsm_store.run),
         ("write_path (bulk-synchronous ingest)", write_path.run),
         ("scan_delete (range scans + tombstone deletes)", scan_delete.run),
+        ("snapshot_compact (generations + snapshot-pinned scans)",
+         snapshot_compact.run),
         ("learned_filter (§5.5, Fig 13)", learned_filter.run),
         ("roofline (dry-run artifacts)", roofline.run),
         ("filter_service (fused cascade vs per-layer)", filter_service.run),

@@ -1,0 +1,220 @@
+"""Generation/snapshot benchmark: scan-during-compaction throughput,
+double-buffered rebuild publish latency, old-vs-new generation parity.
+
+PR 5's generation subsystem closes the consistency gap the paper's §5.4
+LSM application assumes away (the filter cascade is immutable per query):
+scans and probe streams that overlap a compaction or a
+``FilterService.rebuild`` finish on their pinned generation while the new
+one builds. This bench measures what that costs and gates what it must
+never cost:
+
+1. **Scan during compaction.** A paged ``scan_iter`` cursor starts,
+   ``compact()`` + further flushes land between pages, the cursor drains.
+   Reported: merged-out throughput (MKeys/s) and a MATCH flag against the
+   pre-compaction reference scan — the cursor must yield exactly the
+   pre-compaction key set.
+
+2. **Rebuild publish latency.** ``FilterService.rebuild`` is double-
+   buffered: ``prepare`` (pack + jit-warm, expensive) runs while the old
+   state serves; ``publish`` (one reference swap) is the only stall a
+   reader can observe. Gated: ``publish_stall_p99_frac`` — the P99
+   publish stall as a fraction of the median full rebuild
+   (prepare+publish) — a same-machine ratio, following the write-path
+   precedent (absolute µs are recorded but not gated: runner-speed
+   variance would flap a µs-scale absolute gate). The gated value is
+   floored at 0.02: any stall under 2% of a rebuild is timer/GC noise,
+   so the baseline is the deterministic floor — while the regression
+   this gate exists for (packing or jit work migrating back into the
+   swap) pushes the fraction to ~1.0, four orders past the band.
+
+3. **Generation probe parity.** An old generation probed after newer ones
+   publish must return bit-identical (first_hit, hits_mask) to its
+   pre-swap probes (MATCH flag).
+
+    PYTHONPATH=src python -m benchmarks.snapshot_compact      # standalone
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.lsm import ChainedTableFilter
+from repro.serving.filter_service import FilterService
+from repro.storage import LsmStore
+from ._util import mops, render_table, scale
+
+
+def _scan_during_compaction() -> tuple[str, dict]:
+    per = scale(60_000, 3000)
+    n_tables = 6
+    universe = np.sort(np.unique(
+        np.random.default_rng(23).integers(
+            1, 2 ** 63, size=per * n_tables + 64, dtype=np.uint64)
+    ))[:per * n_tables]
+    store = LsmStore(filter_kind="chained", seed=13, memtable_capacity=2 ** 62,
+                     auto_compact=False, compact_min_run=2,
+                     compact_size_ratio=1e9)
+    for i in range(n_tables):
+        ks = universe[i * per:(i + 1) * per]
+        store.put_batch(ks, ks >> np.uint64(11))
+        store.flush()
+    store.delete_batch(universe[::13])          # tombstones ride the cursor
+    store.flush()
+    exp_k, exp_v = store.scan(0, 2 ** 64)       # pre-compaction reference
+
+    page = scale(8192, 512)
+    cursor = store.scan_iter(0, 2 ** 64, page_size=page)
+    t0 = time.perf_counter()
+    pages = [next(cursor)]
+    # the world changes under the cursor: full compaction + a fresh flush
+    store.compact()
+    extra = np.sort(np.unique(np.random.default_rng(29).integers(
+        1, 2 ** 63, size=per // 2, dtype=np.uint64)))
+    store.put_batch(extra, extra)
+    store.flush()
+    pages += list(cursor)
+    dt = time.perf_counter() - t0
+    got_k = np.concatenate([p[0] for p in pages])
+    got_v = np.concatenate([p[1] for p in pages])
+    match = (len(got_k) == len(exp_k) and (got_k == exp_k).all()
+             and (got_v == exp_v).all())
+    out = (f"\n== scan during compaction, {n_tables + 1} tables x {per} keys "
+           f"(page {page}) ==\n"
+           f"cursor drained {len(got_k)} keys in {dt * 1e3:.0f} ms "
+           f"({mops(len(got_k), dt):.2f} MKeys/s) across compact+flush | "
+           f"pre-compaction parity {'MATCH' if match else 'MISMATCH'} | "
+           f"store now {store.n_tables} tables, "
+           f"gen {store.generation.gen_id}")
+    metrics = {
+        "scan_during_compact_mkeys_s": mops(len(got_k), dt),
+        "scan_during_compact_match": bool(match),
+        "scan_during_compact_keys": int(len(got_k)),
+    }
+    return out, metrics
+
+
+_STALL_FRAC_FLOOR = 0.02     # below this, a publish stall is timer noise
+
+
+def _publish_latency() -> tuple[str, dict]:
+    n_rounds = scale(60, 20)
+    per = scale(20_000, 1500)
+    rng = np.random.default_rng(31)
+    keys = np.sort(np.unique(rng.integers(1, 2 ** 63, size=per * 4,
+                                          dtype=np.uint64)))
+    # two alternating bank shapes (3 vs 4 tables) so every rebuild is a
+    # structural change, as in a flush/compaction cycle
+    def bank(n_tables, seed):
+        per_t = len(keys) // n_tables
+        return [ChainedTableFilter.build(
+            keys[i * per_t:(i + 1) * per_t],
+            np.concatenate([keys[:i * per_t], keys[(i + 1) * per_t:]]),
+            seed1=seed + i, seed2=seed + 100 + i) for i in range(n_tables)]
+
+    banks = [bank(3, 7), bank(4, 57)]
+    svc = FilterService(banks[0])
+    probe_q = keys[::7][:2048]
+    prepare_s, publish_s = [], []
+    parity_ok = True
+    for r in range(n_rounds):
+        old_state = svc.state
+        old_member, _ = svc.probe(probe_q, state=old_state)
+        t0 = time.perf_counter()
+        staged = svc.prepare(banks[(r + 1) % 2], warm=True)
+        t1 = time.perf_counter()
+        svc.publish(staged)
+        t2 = time.perf_counter()
+        prepare_s.append(t1 - t0)
+        publish_s.append(t2 - t1)
+        # the old state keeps probing bit-identically after the swap
+        again, _ = svc.probe(probe_q, state=old_state)
+        parity_ok &= bool((again == old_member).all())
+    prepare_ms = float(np.median(prepare_s) * 1e3)
+    rebuild_ms = float(np.median(np.array(prepare_s) + np.array(publish_s))
+                       * 1e3)
+    p99_us = float(np.percentile(publish_s, 99) * 1e6)
+    raw_frac = float(np.percentile(publish_s, 99)
+                     / max(np.median(np.array(prepare_s)
+                                     + np.array(publish_s)), 1e-12))
+    stall_frac = max(raw_frac, _STALL_FRAC_FLOOR)
+    out = (f"\n== rebuild publish latency, {n_rounds} double-buffered "
+           f"rebuilds (3<->4 tables x {per} keys) ==\n"
+           f"prepare (build+jit-warm, old state serving) p50 "
+           f"{prepare_ms:.1f} ms | publish stall p99 {p99_us:.0f} us "
+           f"({raw_frac:.5f} of a full rebuild; gated at the "
+           f"{_STALL_FRAC_FLOOR} noise floor) | old-state probe parity "
+           f"{'MATCH' if parity_ok else 'MISMATCH'}")
+    metrics = {
+        "rebuild_prepare_ms": prepare_ms,
+        "rebuild_total_ms": rebuild_ms,
+        "publish_stall_p99_us": p99_us,
+        "publish_stall_p99_frac_raw": raw_frac,
+        "publish_stall_p99_frac": stall_frac,
+        "publish_parity_match": bool(parity_ok),
+    }
+    return out, metrics
+
+
+def _generation_probe_parity() -> tuple[str, dict]:
+    per = scale(30_000, 2000)
+    n_tables = 4
+    rng = np.random.default_rng(41)
+    keys = np.sort(np.unique(rng.integers(1, 2 ** 63, size=per * n_tables + 64,
+                                          dtype=np.uint64)))[:per * n_tables]
+    store = LsmStore(filter_kind="chained", seed=3, memtable_capacity=2 ** 62,
+                     auto_compact=False, compact_min_run=2,
+                     compact_size_ratio=1e9)
+    for i in range(n_tables):
+        ks = keys[i * per:(i + 1) * per]
+        store.put_batch(ks, ks)
+        store.flush()
+    gen_a = store.generation
+    q = np.concatenate([keys[::5], rng.integers(1, 2 ** 63, size=4096,
+                                                dtype=np.uint64)])
+    t0 = time.perf_counter()
+    first_pre, mask_pre = gen_a.probe_batch(q)
+    pre_dt = time.perf_counter() - t0
+    # publish newer generations: overwrite flush + full compaction
+    over = keys[: per // 2]
+    store.put_batch(over, over + np.uint64(1))
+    store.flush()
+    store.compact()
+    t0 = time.perf_counter()
+    first_post, mask_post = gen_a.probe_batch(q)
+    post_dt = time.perf_counter() - t0
+    match = bool((first_post == first_pre).all()
+                 and (mask_post == mask_pre).all())
+    out = (f"\n== old-vs-new generation probe parity, {len(q)} keys ==\n"
+           f"gen {gen_a.gen_id} probed pre-swap {mops(len(q), pre_dt):.2f} "
+           f"MKeys/s, post-swap (store at gen {store.generation.gen_id}) "
+           f"{mops(len(q), post_dt):.2f} MKeys/s | bit-identical "
+           f"{'MATCH' if match else 'MISMATCH'}")
+    metrics = {
+        "old_gen_probe_match": match,
+        "old_gen_probe_mkeys_s": mops(len(q), post_dt),
+    }
+    return out, metrics
+
+
+def run():
+    out1, m1 = _scan_during_compaction()
+    out2, m2 = _publish_latency()
+    out3, m3 = _generation_probe_parity()
+    summary = render_table(
+        "snapshot/compaction gates",
+        ["metric", "value"],
+        [
+            ["scan_during_compact_match", m1["scan_during_compact_match"]],
+            ["publish_stall_p99_frac", f"{m2['publish_stall_p99_frac']:.4f}"],
+            ["publish_parity_match", m2["publish_parity_match"]],
+            ["old_gen_probe_match", m3["old_gen_probe_match"]],
+        ])
+    return out1 + out2 + out3 + summary, {**m1, **m2, **m3}
+
+
+if __name__ == "__main__":
+    text, metrics = run()
+    print(text)
+    print({k: round(v, 5) if isinstance(v, float) else v
+           for k, v in metrics.items()})

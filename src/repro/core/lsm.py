@@ -38,6 +38,20 @@ class SSTable:
     vals: np.ndarray | None = field(repr=False, default=None)
     tombs: np.ndarray | None = field(repr=False, default=None)
 
+    def freeze(self) -> "SSTable":
+        """Mark the run's arrays read-only (idempotent) and return self.
+
+        Generation-publish contract: once an SSTable is part of a published
+        ``repro.storage`` Generation its arrays never mutate again — scans,
+        probes and compactions only READ them; compaction writes brand-new
+        arrays for the next generation. Freezing turns an accidental
+        in-place write into an immediate ``ValueError`` instead of a
+        silently-corrupted pinned snapshot."""
+        for a in (self.keys, self.vals, self.tombs):
+            if a is not None:
+                a.setflags(write=False)
+        return self
+
     def contains(self, key: int) -> bool:
         """Physical membership (live OR tombstone record)."""
         i = int(np.searchsorted(self.keys, np.uint64(key)))
@@ -98,6 +112,29 @@ class SSTable:
         a = int(np.searchsorted(self.keys, np.uint64(lo), side="left"))
         b = (len(self.keys) if hi >= 2 ** 64
              else int(np.searchsorted(self.keys, np.uint64(hi), side="left")))
+        return self._slice(a, b)
+
+    def slice_page(self, lo: int, hi: int, limit: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int | None]:
+        """At most ``limit`` physical records from the START of the window
+        ``lo <= key < hi`` -> (keys, vals, tombs, truncated_last):
+        ``truncated_last`` is the slice's last key when window records
+        remain beyond it (the caller's paged merge must not emit past it —
+        this run's contribution above that key is unknown), else None.
+        Shares ``slice_range``'s window-boundary semantics (``hi`` may be
+        2**64, end-inclusive of the maximum uint64 key)."""
+        a = int(np.searchsorted(self.keys, np.uint64(lo), side="left"))
+        e = (len(self.keys) if hi >= 2 ** 64
+             else int(np.searchsorted(self.keys, np.uint64(hi), side="left")))
+        if a >= e:                       # no records in the window
+            return (np.empty(0, np.uint64), np.empty(0, np.uint64),
+                    np.empty(0, bool), None)
+        b = min(a + limit, e)
+        ks, vs, ts = self._slice(a, b)
+        return ks, vs, ts, (int(self.keys[b - 1]) if b < e else None)
+
+    def _slice(self, a: int, b: int
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         ks = self.keys[a:b]
         vs = (self.vals[a:b] if self.vals is not None
               else np.zeros(b - a, dtype=np.uint64))

@@ -80,9 +80,23 @@ def _group_chains(chains: tuple) -> tuple[dict, list]:
     return groups, scalar
 
 
-def _group_params(chains: tuple) -> np.ndarray:
+def chain_params_len(chains: tuple) -> int:
+    """Length of the packed params vector ``pack_chain_params`` produces for
+    ``chains`` (128-word padded) — lets callers validate a precomputed
+    params array against a chains tuple without repacking it."""
+    groups, _ = _group_chains(chains)
+    flat = sum(_N_FIELDS * len(ts) for ts in groups.values())
+    return max(128, flat + ((-flat) % 128)) if flat else 128
+
+
+def pack_chain_params(chains: tuple) -> np.ndarray:
     """Column-major per-group field vectors, one contiguous uint32 block per
-    group in ``_group_chains`` iteration order."""
+    group in ``_group_chains`` iteration order.
+
+    This is the per-generation params array: a published ``Generation``
+    packs it ONCE (and freezes it), so probes of an old generation after a
+    newer one publishes read that generation's own immutable lanes — a
+    probe can never observe a half-refreshed params array."""
     groups, _ = _group_chains(chains)
     blocks = []
     for _, ts in groups.items():
@@ -253,16 +267,25 @@ def _kernel(words_ref, params_ref, hi_ref, lo_ref, first_ref, mask_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("chains", "interpret"))
-def lsm_probe(words, hi2d, lo2d, *, chains: tuple, interpret: bool = True):
+def lsm_probe(words, hi2d, lo2d, params=None, *, chains: tuple,
+              interpret: bool = True):
     """words: packed uint32 FilterBank buffer (W % 128 == 0); hi2d/lo2d:
     uint32 [R, 128] with R % 8 == 0; chains: static per-table descriptors,
-    newest first (see module docstring). Returns (first_hit, hits_mask)
+    newest first (see module docstring). ``params`` may be a precomputed
+    ``pack_chain_params(chains)`` array (the generation-owned plumbing:
+    each published Generation passes its own frozen lanes); when omitted it
+    is packed here at trace time. Returns (first_hit, hits_mask)
     int32 [R, 128]."""
     if len(chains) == 0 or len(chains) > MAX_TABLES:
         raise ValueError(f"need 1..{MAX_TABLES} tables, got {len(chains)}")
     R = hi2d.shape[0]
     W = words.shape[0]
-    params = _group_params(chains)
+    if params is None:
+        params = pack_chain_params(chains)
+    elif params.shape[0] != chain_params_len(chains):
+        raise ValueError(
+            f"params length {params.shape[0]} does not match chains "
+            f"(expected {chain_params_len(chains)})")
     P = params.shape[0]
     tile = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
     return pl.pallas_call(

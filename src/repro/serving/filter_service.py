@@ -149,8 +149,29 @@ def bank_probe(tables, hi2d, lo2d, *, layouts: tuple, interpret: bool = True):
 
 
 # ---------------------------------------------------------------------------
-# FilterService — batched query streams, device-sharded
+# FilterService — batched query streams, device-sharded, double-buffered
 # ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BankState:
+    """One immutable published bank version: the packed buffer, its static
+    layouts, and the jitted sharded probe closure, swapped as a UNIT.
+
+    Static-function filters (Xor/Bloomier/Othello — Dietzfelbinger & Pagh;
+    Graf & Lemire) cannot be mutated mid-probe, so consistency under
+    concurrent rebuilds comes from versioned immutable states, not locks:
+    a reader that captured a ``BankState`` keeps probing it bit-identically
+    no matter how many newer versions publish after it."""
+
+    bank: FilterBank
+    tables: object                     # jnp uint32 [W] (device-resident)
+    probe_fn: object                   # jitted shard_map'd bank_probe
+    version: int                       # monotonically increasing
+
+    @property
+    def n_filters(self) -> int:
+        return self.bank.n_filters
+
 
 @dataclass
 class ServiceStats:
@@ -172,7 +193,14 @@ class FilterService:
 
     ``probe(keys)`` evaluates every filter in the bank on the whole key
     batch in one jitted dispatch; rows are sharded across the mesh's
-    ``data`` axis with shard_map (the table buffer is replicated)."""
+    ``data`` axis with shard_map (the table buffer is replicated).
+
+    The service is **double-buffered**: the complete read state (packed
+    buffer + layouts + jitted probe closure) lives in one immutable
+    ``BankState``, and ``rebuild`` = ``prepare`` (build + jit-warm the new
+    bank while the old state stays fully probe-able) + ``publish`` (ONE
+    reference swap). A probe stream that captured the old state — e.g. a
+    pinned storage generation — finishes against it unchanged."""
 
     def __init__(self, filters: list, *, mesh=None, interpret: bool = True):
         self.interpret = interpret
@@ -180,13 +208,39 @@ class FilterService:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
         self.mesh = mesh
         self._row_multiple = common.BLOCK_ROWS * self.mesh.devices.size
-        self._setup(filters)
+        self._state: BankState | None = None
+        self.publish(self.prepare(filters))
 
-    def _setup(self, filters: list) -> None:
-        self.bank = FilterBank.pack(filters)
-        self._tables = jnp.asarray(self.bank.tables)
-        layouts, interp = self.bank.layouts, self.interpret
-        self._probe_fn = jax.jit(shard_map(
+    # -- double-buffered bank states -----------------------------------------
+    @property
+    def state(self) -> BankState:
+        """The currently published BankState. Capture it to keep probing
+        this exact bank version across later rebuilds (``probe(keys,
+        state=captured)``)."""
+        return self._state
+
+    @property
+    def version(self) -> int:
+        return self._state.version if self._state is not None else -1
+
+    @property
+    def bank(self) -> FilterBank:
+        return self._state.bank
+
+    def prepare(self, filters: list, *, warm: bool = False) -> BankState:
+        """Build the NEXT bank version off to the side — all while the
+        published state keeps serving. With ``warm=True`` the sharded probe
+        closure is additionally jit-compiled and warmed on a dummy block,
+        so the first probe after ``publish`` pays no compilation stall
+        (pass it when ``probe`` is the serving hot path; LsmStore banks
+        probe through the fused ``lsm_probe`` kernel instead and skip it).
+        Returns the staged state; nothing is visible to readers until
+        ``publish``."""
+        bank = FilterBank.pack(filters)
+        bank.tables.setflags(write=False)      # immutable once staged
+        tables = jnp.asarray(bank.tables)
+        layouts, interp = bank.layouts, self.interpret
+        probe_fn = jax.jit(shard_map(
             lambda t, h, l: bank_probe(t, h, l, layouts=layouts,
                                        interpret=interp),
             mesh=self.mesh,
@@ -194,9 +248,23 @@ class FilterService:
             out_specs=(P(None, "data", None), P(None, "data", None)),
             check_rep=False,
         ))
+        if warm:
+            # jit-warm: trace + compile now, so the first probe after
+            # publish pays no compilation stall
+            z = jnp.zeros((self._row_multiple, common.BLOCK_COLS), jnp.uint32)
+            jax.block_until_ready(probe_fn(tables, z, z))
+        return BankState(bank=bank, tables=tables, probe_fn=probe_fn,
+                         version=self.version + 1)
+
+    def publish(self, state: BankState) -> None:
+        """Atomically install a staged state as the serving bank — ONE
+        reference assignment; in-flight readers that captured the previous
+        state finish against it. Stats reset (the caller owns
+        cross-version accounting)."""
+        self._state = state
         self.stats = ServiceStats(
-            hits=np.zeros(self.bank.n_filters, np.int64),
-            probes=np.zeros(self.bank.n_filters, np.int64))
+            hits=np.zeros(state.bank.n_filters, np.int64),
+            probes=np.zeros(state.bank.n_filters, np.int64))
 
     # -- batched probing -----------------------------------------------------
     def _block_keys(self, keys: np.ndarray):
@@ -209,20 +277,28 @@ class FilterService:
             lo2d = np.concatenate([lo2d, z])
         return jnp.asarray(hi2d), jnp.asarray(lo2d), n
 
-    def probe(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def probe(self, keys: np.ndarray, state: BankState | None = None
+              ) -> tuple[np.ndarray, np.ndarray]:
         """-> (member bool [F, n], probes int [F, n]) for n keys across the
-        bank's F filters; updates hit/probe stats."""
-        if len(keys) == 0:
-            shape = (self.bank.n_filters, 0)
+        bank's F filters; updates hit/probe stats. Pass a captured ``state``
+        to probe an OLDER published bank version bit-identically (stats are
+        left untouched for non-current states — cross-version accounting
+        belongs to the caller)."""
+        current = state is None or state is self._state
+        if state is None:
+            state = self._state            # captured ONCE: a publish racing
+        if len(keys) == 0:                 # this call cannot tear the probe
+            shape = (state.n_filters, 0)
             return np.zeros(shape, bool), np.zeros(shape, np.int32)
         hi2d, lo2d, n = self._block_keys(keys)
-        member, probes = self._probe_fn(self._tables, hi2d, lo2d)
-        member = np.asarray(member).reshape(self.bank.n_filters, -1)[:, :n]
-        probes = np.asarray(probes).reshape(self.bank.n_filters, -1)[:, :n]
+        member, probes = state.probe_fn(state.tables, hi2d, lo2d)
+        member = np.asarray(member).reshape(state.n_filters, -1)[:, :n]
+        probes = np.asarray(probes).reshape(state.n_filters, -1)[:, :n]
         member = member.astype(bool)
-        self.stats.lookups += n
-        self.stats.hits += member.sum(axis=1)
-        self.stats.probes += probes.sum(axis=1)
+        if current:
+            self.stats.lookups += n
+            self.stats.hits += member.sum(axis=1)
+            self.stats.probes += probes.sum(axis=1)
         return member, probes
 
     def probe_filter(self, index: int, keys: np.ndarray) -> np.ndarray:
@@ -230,33 +306,42 @@ class FilterService:
         that filter's kernel and leaves the aggregate stats untouched."""
         if len(keys) == 0:
             return np.zeros(0, bool)
+        state = self._state
         hi2d, lo2d, n = self._block_keys(keys)
-        member, _ = bank_probe(self._tables, hi2d, lo2d,
-                               layouts=(self.bank.layouts[index],),
+        member, _ = bank_probe(state.tables, hi2d, lo2d,
+                               layouts=(state.bank.layouts[index],),
                                interpret=self.interpret)
         return np.asarray(member).reshape(-1)[:n].astype(bool)
 
     def refresh_tables(self, filters: list) -> None:
-        """Re-pack mutated filter contents into the existing bank. Valid only
-        while every filter's layout (sizes, seeds, offsets) is unchanged —
-        e.g. Bloom bit-flips from inserts or Othello exclusions that did not
-        resize — so the jitted probe function and its compilation cache
-        survive. Packing calls each filter's ``to_tables``, which is where
-        batched Othello exclusions materialize their lazily-flipped
-        components — one refresh per flush folds a whole batch of online
-        updates into the device buffer."""
+        """Re-pack mutated filter contents into a NEW published state. Valid
+        only while every filter's layout (sizes, seeds, offsets) is
+        unchanged — e.g. Bloom bit-flips from inserts or Othello exclusions
+        that did not resize — so the jitted probe closure and its
+        compilation cache survive (the new state reuses it). Packing calls
+        each filter's ``to_tables``, which is where batched Othello
+        exclusions materialize their lazily-flipped components — one refresh
+        per flush folds a whole batch of online updates into the device
+        buffer. The previous state's buffer is never touched: readers
+        pinned to it keep probing the old contents. Stats are kept
+        (content-only refresh)."""
+        old = self._state
         bank = FilterBank.pack(filters)
-        if bank.layouts != self.bank.layouts:
+        if bank.layouts != old.bank.layouts:
             raise ValueError("filter layouts changed; build a new FilterService")
-        self.bank = bank
-        self._tables = jnp.asarray(bank.tables)
+        bank.tables.setflags(write=False)
+        self._state = BankState(bank=bank, tables=jnp.asarray(bank.tables),
+                                probe_fn=old.probe_fn,
+                                version=old.version + 1)
 
-    def rebuild(self, filters: list) -> None:
-        """Structural refresh (filters added/removed/resized): re-pack and
-        re-jit the probe function, keeping the mesh. Stats reset — the caller
-        owns cross-generation accounting. Prefer ``refresh_tables`` when the
+    def rebuild(self, filters: list, *, warm: bool = False) -> None:
+        """Structural refresh (filters added/removed/resized), double-
+        buffered: ``prepare`` builds (and with ``warm=True`` jit-warms) the
+        next state while the published one keeps serving, then ``publish``
+        swaps one reference. Stats reset — the caller owns
+        cross-generation accounting. Prefer ``refresh_tables`` when the
         layouts are unchanged (it keeps the compilation cache)."""
-        self._setup(filters)
+        self.publish(self.prepare(filters, warm=warm))
 
     def unpack(self) -> list:
         return self.bank.unpack()

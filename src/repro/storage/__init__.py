@@ -8,15 +8,21 @@ fused ``kernels.lsm_probe`` kernel (one launch for all tables, ≤ 1 wasted
 SSTable read per query). Deletes are tombstone records excluded from every
 chained filter (0 reads for deleted keys) and garbage-collected at
 compaction; ``scan(lo, hi)`` k-way merges sorted runs under min/max fence
-pruning. ``workloads`` provides deterministic traffic generators and the
-§5.4 latency accounting.
+pruning. Every mutation publishes an immutable generation-tagged read
+state (``generation.Generation``) through ONE swap point, and
+``LsmStore.snapshot()`` pins a generation (+ frozen memtable image) for
+long-lived cursors — compaction defers GC of tombstones an open snapshot
+still observes. ``workloads`` provides deterministic traffic generators
+and the §5.4 latency accounting.
 """
+from .generation import Generation, Snapshot
 from .lsm_store import LsmStore, StoreStats
 from .workloads import (WorkloadOp, LatencyAccountant, uniform_write_heavy,
                         zipfian_read_heavy, mixed_read_write, crud_mixed,
                         run_workload)
 
 __all__ = [
+    "Generation", "Snapshot",
     "LsmStore", "StoreStats", "WorkloadOp", "LatencyAccountant",
     "uniform_write_heavy", "zipfian_read_heavy", "mixed_read_write",
     "crud_mixed", "run_workload",

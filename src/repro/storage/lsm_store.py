@@ -20,14 +20,26 @@ of the PR-1 probe stack:
   the merged table's filter, with negatives drawn from every other table
   so per-table exactness over the store's key universe survives.
 
-- **Read path.** Every flush/compaction refreshes a ``FilterBank`` through
-  the store's ``FilterService`` — in place (``refresh_tables``) when only
-  filter *contents* changed, re-jitted (``rebuild``) on structural change —
-  so all tables' filters live in one packed 128-word-aligned uint32 buffer.
-  ``get_batch`` probes ALL SSTable filters for the whole key batch in one
-  fused ``lsm_probe`` launch (vs one dispatch per table), then resolves the
-  newest-first first-hit per key with one vectorized ``searchsorted`` read:
-  found ⇒ 1 read, miss-but-fired ⇒ exactly 1 wasted read, else 0.
+- **Read path: generations.** Every flush/compaction/deferred-GC sweep
+  funnels through ONE swap point (``_publish``): the build-side
+  (sstables, filters) lists are frozen into an immutable ``Generation``
+  — packed FilterBank buffer, static probe descriptors and pre-packed
+  per-table param lanes, all marked read-only — and installed with a
+  single reference assignment. ``get_batch`` probes ALL SSTable filters
+  of the current generation for the whole key batch in one fused
+  ``lsm_probe`` launch, then resolves the newest-first first-hit per key
+  with one vectorized ``searchsorted`` read: found ⇒ 1 read,
+  miss-but-fired ⇒ exactly 1 wasted read, else 0. The bank refresh is
+  double-buffered through ``FilterService`` (build + jit-warm the next
+  ``BankState`` while the old stays probe-able, then publish).
+
+- **Snapshots.** ``snapshot()`` pins the current generation (refcounted)
+  plus a frozen memtable image; the handle's ``get_batch``/``scan``/
+  ``scan_iter`` resolve against the pinned state only, so long-lived
+  cursors and pagination finish on their generation while flushes and
+  compactions publish newer ones. Tombstones a snapshot can still observe
+  are exempt from compaction GC until release (**deferred GC**); the last
+  snapshot's release collects them.
 
 - **Deletes (tombstones).** ``delete_batch`` writes tombstone records that
   ride the same memtable/flush machinery (newest-wins merge makes them
@@ -35,12 +47,13 @@ of the PR-1 probe stack:
   chained filter — never enrolled in its own table's filter and pinned to
   stage-2 zero in older filters via ``exclude_deleted`` (true positives
   too) — so a deleted key fires nothing and costs 0 reads; compaction
-  garbage-collects the record once no older run can still hold the key.
+  garbage-collects the record once no older run can still hold the key
+  AND no open snapshot still observes the tombstone.
 
 - **Range scans.** ``scan(lo, hi)`` k-way merges memtable + SSTable slices
   newest-first over the half-open window with newest-wins/tombstone
   masking. Filters cannot prune a range; each sorted run's min/max fences
-  can, and do.
+  can, and do. ``scan_iter`` is the paged, snapshot-pinned variant.
 
 Per-table Bloom (``filter_kind='bloom'``) and filterless
 (``filter_kind='none'``) baselines share the same probe kernel and batched
@@ -54,18 +67,53 @@ import types
 from dataclasses import dataclass, field
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import hashing as H
 from repro.core.bloom import BloomFilter
 from repro.core.lsm import SSTable, ChainedTableFilter, _in_sorted
 from repro.core.tables import TABLE_ALIGN, BloomTable, LsmChainLayout
-from repro.kernels import common
-from repro.kernels.lsm_probe import MAX_TABLES, lsm_probe
+from repro.kernels.lsm_probe import MAX_TABLES
 from repro.serving.filter_service import FilterService
+from repro.storage.generation import Generation, Snapshot
 
 FILTER_KINDS = ("chained", "bloom", "none")
+
+
+class _ScanCursor:
+    """Iterator of (keys, vals) pages that OWNS a snapshot pin. A plain
+    wrapper generator cannot guarantee release: closing or abandoning a
+    never-started generator skips its ``finally`` entirely, leaking the
+    pin (and blocking deferred tombstone GC) forever. This object releases
+    on exhaustion, on ``close()``, on error, and — last resort — on GC."""
+
+    def __init__(self, snap, inner):
+        self._snap = snap
+        self._inner = inner
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        try:
+            return next(self._inner)
+        except BaseException:       # StopIteration included: pin released
+            self.close()
+            raise
+
+    def close(self) -> None:
+        self._inner.close()
+        self._snap.close()          # idempotent
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass                    # interpreter teardown
+
+    def __enter__(self) -> "_ScanCursor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def _chain_descriptor(layout) -> tuple:
@@ -90,8 +138,12 @@ class StoreStats:
     sstable_reads: int = 0
     wasted_reads: int = 0            # reads that found nothing
     tombstones_gced: int = 0         # tombstone records dropped (flush+compact)
+    tombstones_gc_deferred: int = 0  # GC-able tombstones kept for a snapshot
     scan_tables_read: int = 0        # table slices merged by scans
     scan_tables_pruned: int = 0      # table slices skipped by min/max fences
+    generations_published: int = 0   # swap-point count (flush/compact/GC)
+    snapshots_opened: int = 0
+    snapshots_closed: int = 0
 
     def as_dict(self) -> dict:
         d = dict(self.__dict__)
@@ -102,7 +154,8 @@ class StoreStats:
 @dataclass
 class LsmStore:
     """Point-query LSM store: memtable + newest-first immutable SSTables,
-    batched filter-guarded reads through one fused kernel launch."""
+    batched filter-guarded reads through one fused kernel launch against
+    generation-tagged immutable banks."""
 
     filter_kind: str = "chained"
     memtable_capacity: int = 4096
@@ -119,14 +172,25 @@ class LsmStore:
     filters: list = field(default_factory=list, repr=False)    # parallel
     service: FilterService | None = field(default=None, repr=False)
     stats: StoreStats = field(default_factory=StoreStats, repr=False)
+    # snapshot-handle traffic accumulates HERE, not in ``stats`` — gated
+    # benchmark metrics derived from live-read accounting must not be
+    # contaminated by pinned-view reads (same isolation rule as
+    # FilterService.probe on non-current states)
+    snap_stats: StoreStats = field(default_factory=StoreStats, repr=False)
 
     def __post_init__(self):
         if self.filter_kind not in FILTER_KINDS:
             raise ValueError(f"filter_kind must be one of {FILTER_KINDS}")
         self._flush_count = 0
         self._compact_count = 0
-        self._chains: tuple = ()
-        self._tables_dev = jnp.zeros(TABLE_ALIGN, dtype=jnp.uint32)
+        # generation-tagged read state: reads resolve against the last
+        # PUBLISHED generation; the dataclass lists above are the private
+        # build-side copies every mutation path edits before one publish.
+        self._gen = Generation.empty(0)
+        self._next_gen_id = 1
+        self._snapshots: list[Snapshot] = []      # open handles, any order
+        self._pinned: dict[int, int] = {}         # gen_id -> snapshot refs
+        self._gc_pending = False                  # deferred tombstones exist
         # array-backed memtable: parallel sorted key/value/tombstone arrays,
         # merged on every put_batch/delete_batch (newest-wins) — flush drains
         # them with zero copies. A True tombstone row means "deleted here".
@@ -170,7 +234,9 @@ class LsmStore:
             self._mt_tombs = cat_t[fi]
         else:
             # big memtable, small batch: overwrite hits in place and splice
-            # misses by position — O(batch log + memtable), no full re-sort
+            # misses by position — O(batch log + memtable), no full re-sort.
+            # Open snapshots hold COPIES of these arrays, so the in-place
+            # writes never leak into a pinned view.
             pos = np.searchsorted(self._mt_keys, uk)
             pos_c = np.minimum(pos, m - 1)
             hit = self._mt_keys[pos_c] == uk
@@ -269,7 +335,8 @@ class LsmStore:
         — live keys via ``exclude_new`` (stage-1 false positives), deleted
         keys via ``exclude_deleted`` (true positives too: a tombstone kills
         every older table's filter for its key) — compact if a size-tiered
-        run formed, and refresh the packed bank."""
+        run formed, and publish ONE new generation. Readers (and pinned
+        snapshots) resolve against the previous generation until the swap."""
         if not len(self._mt_keys):
             return
         # the array memtable IS the sorted, deduped run — drain directly
@@ -279,7 +346,9 @@ class LsmStore:
         self._mt_tombs = np.empty(0, dtype=bool)
         if tombs.any():
             # flush-time GC: a tombstone only earns its SSTable row if some
-            # older table still physically holds the key it shadows
+            # older table still physically holds the key it shadows. (No
+            # snapshot deferral needed here: open snapshots carry their own
+            # frozen memtable image, so the record was never theirs to lose.)
             dead = keys[tombs]
             shadowing = np.zeros(len(dead), dtype=bool)
             for t in self.sstables:
@@ -294,7 +363,9 @@ class LsmStore:
         if not len(keys):
             return                        # every record was a useless tombstone
         live = keys[~tombs] if len(dead) else keys
-        # one batched stage-2 exclusion pass per older table (vs per-key)
+        # one batched stage-2 exclusion pass per older table (vs per-key);
+        # these mutate the BUILD-side filter objects only — every published
+        # generation already packed its own frozen copy of the bank
         for tbl, filt in zip(self.sstables, self.filters):
             if isinstance(filt, ChainedTableFilter):
                 filt.exclude_new(tbl.keys, live)
@@ -302,28 +373,36 @@ class LsmStore:
         other = (np.concatenate([t.keys for t in self.sstables])
                  if self.sstables else np.empty(0, np.uint64))
         f = self._build_filter(live, dead, other, self._flush_seeds())
-        self.sstables.insert(0, SSTable(keys, vals,
-                                        tombs if len(dead) else None))
-        self.filters.insert(0, f)
+        tables = [SSTable(keys, vals, tombs if len(dead) else None)]
+        tables += self.sstables
+        filters = [f] + list(self.filters)
         self._flush_count += 1
         self.stats.flushes += 1
         if self.auto_compact:
-            self._compact_all()
-            if len(self.sstables) > MAX_TABLES:
+            tables, filters = self._compact_all(tables, filters)
+            if len(tables) > MAX_TABLES:
                 # probe-kernel cap: force-merge the oldest tables into one
                 # run even when no size-tiered run qualifies
-                self._merge_run(MAX_TABLES - 1, len(self.sstables) - 1)
-        elif len(self.sstables) > MAX_TABLES:
+                tables, filters = self._merge_run(
+                    tables, filters, MAX_TABLES - 1, len(tables) - 1)
+        elif len(tables) > MAX_TABLES:
+            # install the build-side lists BEFORE raising so the drained
+            # batch (and its tombstones' filter exclusions) is never lost:
+            # reads keep serving the last published generation — stale but
+            # CONSISTENT — and the compact() this error demands merges
+            # below the kernel cap and publishes everything
+            self.sstables, self.filters = tables, filters
             raise RuntimeError(f"more than {MAX_TABLES} SSTables without "
                                "compaction; call compact()")
-        self._sync_bank()
+        self.sstables, self.filters = tables, filters
+        self._publish()
 
     # ------------------------------------------------------------- compaction
-    def _find_run(self) -> tuple[int, int] | None:
+    def _find_run(self, tables: list) -> tuple[int, int] | None:
         """Longest age-adjacent run of >= compact_min_run tables whose sizes
         stay within compact_size_ratio (size-tiered policy; adjacency keeps
         newest-wins shadowing intact)."""
-        sizes = [len(t.keys) for t in self.sstables]
+        sizes = [len(t.keys) for t in tables]
         n = len(sizes)
         for i in range(n):
             j, mn, mx = i, sizes[i], sizes[i]
@@ -338,8 +417,19 @@ class LsmStore:
                 return i, j
         return None
 
-    def _merge_run(self, i: int, j: int) -> None:
-        run = self.sstables[i:j + 1]
+    def _merge_run(self, tables: list, filters: list, i: int, j: int,
+                   tomb_shadowing: np.ndarray | None = None
+                   ) -> tuple[list, list]:
+        """Merge ``tables[i:j+1]`` into one run on the PRIVATE build-side
+        lists and return the edited lists — nothing is published here, so
+        half-merged states are never observable by readers.
+
+        ``tomb_shadowing`` lets a caller that already probed the older
+        tables (``_collect_deferred``'s eligibility sweep) pass its result
+        in instead of paying the searchsorted pass twice; it must be the
+        older-run physical-membership mask for exactly the merged run's
+        ascending tombstoned keys (always true for a single-table merge)."""
+        run = tables[i:j + 1]
         cat_k = np.concatenate([t.keys for t in run])          # newest first
         cat_v = np.concatenate([
             t.vals if t.vals is not None else np.zeros(len(t.keys), np.uint64)
@@ -353,36 +443,50 @@ class LsmStore:
         uv, ut = cat_v[first_idx], cat_t[first_idx]
         # tombstone GC: a surviving tombstone is still needed only while an
         # OLDER run can physically hold its key; once nothing older remains,
-        # the record — and the key — leave the store for good
+        # the record — and the key — leave the store for good. DEFERRED for
+        # tombstones an open snapshot still observes: dropping their record
+        # here would mean the new generation forgets a deletion the pinned
+        # readers still rely on seeing retained store-wide.
         gced = np.empty(0, dtype=np.uint64)
         if ut.any():
-            older = self.sstables[j + 1:]
             tomb_keys = uk[ut]               # probe ONLY the tombstoned rows
-            shadowing_t = np.zeros(len(tomb_keys), dtype=bool)
-            for t in older:
-                shadowing_t |= t.contains_many(tomb_keys)
+            if tomb_shadowing is not None:
+                assert len(tomb_shadowing) == len(tomb_keys)
+                shadowing_t = tomb_shadowing
+            else:
+                shadowing_t = np.zeros(len(tomb_keys), dtype=bool)
+                for t in tables[j + 1:]:
+                    shadowing_t |= t.contains_many(tomb_keys)
             drop = np.zeros(len(uk), dtype=bool)
             drop[ut] = ~shadowing_t
+            if drop.any() and self._snapshots:
+                cand = uk[drop]
+                visible = self._visible_to_any_snapshot(cand)
+                if visible.any():
+                    keep_idx = np.flatnonzero(drop)[visible]
+                    drop[keep_idx] = False
+                    self.stats.tombstones_gc_deferred += int(visible.sum())
+                    self._gc_pending = True
             if drop.any():
                 gced = uk[drop]
                 self.stats.tombstones_gced += int(drop.sum())
                 uk, uv, ut = uk[~drop], uv[~drop], ut[~drop]
         if not len(uk):
             # the whole run was GC-able tombstones — drop the tables outright
-            self.sstables[i:j + 1] = []
-            self.filters[i:j + 1] = []
+            tables = tables[:i] + tables[j + 1:]
+            filters = filters[:i] + filters[j + 1:]
             self._compact_count += 1
             self.stats.compactions += 1
-            return
+            return tables, filters
         merged = SSTable(uk, uv, ut if ut.any() else None)
-        others = self.sstables[:i] + self.sstables[j + 1:]
+        others = tables[:i] + tables[j + 1:]
         other_keys = (np.concatenate([t.keys for t in others])
                       if others else np.empty(0, np.uint64))
         # a merged live row may still be shadowed by a tombstone in a NEWER
         # table (outside the run): it must not enroll as a positive, or the
         # first-hit probe would resurrect the deleted key from this table
         shadowed = np.zeros(len(uk), dtype=bool)
-        for t in self.sstables[:i]:
+        for t in tables[:i]:
             if t.tombs is not None and t.tombs.any():
                 shadowed |= _in_sorted(t.keys[t.tombs], uk)
         live_mask = ~ut & ~shadowed
@@ -393,143 +497,257 @@ class LsmStore:
         # just-GC'd keys ride along as negatives-only.
         f = self._build_filter(uk[live_mask], uk[~live_mask], other_keys,
                                self._compact_seeds(), gone_keys=gced)
-        self.sstables[i:j + 1] = [merged]
-        self.filters[i:j + 1] = [f]
+        tables = tables[:i] + [merged] + tables[j + 1:]
+        filters = filters[:i] + [f] + filters[j + 1:]
         self._compact_count += 1
         self.stats.compactions += 1
+        return tables, filters
 
-    def _compact_all(self) -> None:
+    def _compact_all(self, tables: list, filters: list) -> tuple[list, list]:
         while True:
-            run = self._find_run()
+            run = self._find_run(tables)
             if run is None:
-                return
-            self._merge_run(*run)
+                return tables, filters
+            tables, filters = self._merge_run(tables, filters, *run)
 
     def compact(self) -> None:
-        """Run size-tiered compaction to a fixed point and refresh the bank."""
-        self._compact_all()
-        self._sync_bank()
+        """Run size-tiered compaction to a fixed point against a PRIVATE
+        copy of the table/filter lists, then publish the result as ONE new
+        generation — the single swap point shared with flush. A scan or
+        probe stream that started (or a snapshot that was pinned) before
+        this call keeps resolving against the pre-compaction generation."""
+        tables, filters = self._compact_all(list(self.sstables),
+                                            list(self.filters))
+        self.sstables, self.filters = tables, filters
+        self._publish()
 
-    # ------------------------------------------------------------ filter bank
-    def _sync_bank(self) -> None:
-        """Refresh the packed FilterBank after a structural or content
-        change: in place when every layout is unchanged (Othello exclusions
-        that did not resize), full re-jit otherwise (flush/compaction)."""
+    # ---------------------------------------------------- generation publish
+    def _publish(self) -> None:
+        """THE one swap point: pack the build-side (sstables, filters) into
+        a new immutable ``Generation`` and install it with a single
+        reference assignment. The FilterService refresh is double-buffered
+        — in place (``refresh_tables``) when every layout is unchanged
+        (Othello exclusions that did not resize), prepare+publish
+        (``rebuild``) on structural change — and in either case the
+        PREVIOUS generation keeps its own frozen buffers, so pinned
+        snapshots and in-flight probe streams are never torn."""
         live = [f for f in self.filters if f is not None]
+        bank_state = None
         if not live:
             self.service = None
-            self._chains = tuple(("always",) for _ in self.sstables)
-            self._tables_dev = jnp.zeros(TABLE_ALIGN, dtype=jnp.uint32)
-            return
-        if len(live) != len(self.sstables):
-            raise RuntimeError("mixed filtered/filterless tables unsupported")
-        if self.service is None:
-            self.service = FilterService(live, mesh=self.mesh,
-                                         interpret=self.interpret)
-        elif len(live) != self.service.bank.n_filters:
-            # filter added/removed: layouts certainly changed — skip the
-            # refresh_tables attempt (it would pack the whole bank once
-            # just to find out)
-            self.service.rebuild(live)
+            chains = tuple(("always",) for _ in self.sstables)
+            tables = np.zeros(TABLE_ALIGN, dtype=np.uint32)
         else:
-            try:
-                self.service.refresh_tables(live)
-            except ValueError:
+            if len(live) != len(self.sstables):
+                raise RuntimeError("mixed filtered/filterless tables unsupported")
+            if self.service is None:
+                self.service = FilterService(live, mesh=self.mesh,
+                                             interpret=self.interpret)
+            elif len(live) != self.service.bank.n_filters:
+                # filter added/removed: layouts certainly changed — skip the
+                # refresh_tables attempt (it would pack the whole bank once
+                # just to find out)
                 self.service.rebuild(live)
-        self._chains = tuple(_chain_descriptor(lay)
-                             for lay in self.service.bank.layouts)
-        self._tables_dev = jnp.asarray(self.service.bank.tables)
+            else:
+                try:
+                    self.service.refresh_tables(live)
+                except ValueError:
+                    self.service.rebuild(live)
+            bank_state = self.service.state
+            chains = tuple(_chain_descriptor(lay)
+                           for lay in bank_state.bank.layouts)
+            tables = bank_state.bank.tables
+        self._gen = Generation.create(
+            self._next_gen_id, self.sstables, chains, tables, bank_state,
+            sum(f.bits for f in live))
+        self._next_gen_id += 1
+        self.stats.generations_published += 1
+
+    @property
+    def generation(self) -> Generation:
+        """The currently published immutable read state."""
+        return self._gen
+
+    @property
+    def _chains(self) -> tuple:
+        return self._gen.chains
+
+    @property
+    def _tables_dev(self):
+        return self._gen.tables_dev
+
+    # -------------------------------------------------------------- snapshots
+    def snapshot(self) -> Snapshot:
+        """Open a pinned point-in-time read handle: the current generation
+        (refcounted — compaction may neither mutate nor free its tables)
+        plus a frozen copy of the memtable. Close it (or use ``with``) to
+        release; GC of tombstones the snapshot still observes is deferred
+        until then."""
+        mt_k, mt_v, mt_t = (self._mt_keys.copy(), self._mt_vals.copy(),
+                            self._mt_tombs.copy())
+        for a in (mt_k, mt_v, mt_t):
+            a.setflags(write=False)
+        snap = Snapshot(self, self._gen, mt_k, mt_v, mt_t)
+        self._snapshots.append(snap)
+        gid = self._gen.gen_id
+        self._pinned[gid] = self._pinned.get(gid, 0) + 1
+        self.stats.snapshots_opened += 1
+        return snap
+
+    @property
+    def open_snapshots(self) -> int:
+        return len(self._snapshots)
+
+    @property
+    def pinned_generations(self) -> dict:
+        """{gen_id: open-snapshot refcount} — empty when nothing is pinned."""
+        return dict(self._pinned)
+
+    def _release(self, snap: Snapshot) -> None:
+        """Snapshot close path: drop the pin and, once the LAST snapshot is
+        gone, collect tombstones whose GC compaction deferred."""
+        self._snapshots.remove(snap)
+        self.stats.snapshots_closed += 1
+        gid = snap.gen.gen_id
+        self._pinned[gid] -= 1
+        if not self._pinned[gid]:
+            del self._pinned[gid]
+        if self._gc_pending and not self._snapshots:
+            self._collect_deferred()
+
+    def _visible_to_any_snapshot(self, keys: np.ndarray) -> np.ndarray:
+        """bool [n]: some open snapshot's newest record for the key is a
+        tombstone (its GC must be deferred until that snapshot releases)."""
+        vis = np.zeros(len(keys), dtype=bool)
+        for s in self._snapshots:
+            vis |= s.sees_tombstone(keys)
+            if vis.all():
+                break
+        return vis
+
+    def _collect_deferred(self) -> None:
+        """Last snapshot released: rewrite (single-table merge) every table
+        still carrying now-GC-able tombstones, then publish ONE new
+        generation for the whole sweep."""
+        self._gc_pending = False
+        tables, filters = list(self.sstables), list(self.filters)
+        i, changed = 0, False
+        while i < len(tables):
+            t = tables[i]
+            if t.tombs is not None and t.tombs.any():
+                tomb_keys = t.keys[t.tombs]
+                shadowing = np.zeros(len(tomb_keys), dtype=bool)
+                for o in tables[i + 1:]:
+                    shadowing |= o.contains_many(tomb_keys)
+                if not shadowing.all():
+                    n_before = len(tables)
+                    tables, filters = self._merge_run(
+                        tables, filters, i, i, tomb_shadowing=shadowing)
+                    changed = True
+                    if len(tables) < n_before:
+                        continue      # the table was all GC-able tombstones
+            i += 1
+        if changed:
+            self.sstables, self.filters = tables, filters
+            self._publish()
 
     # -------------------------------------------------------------- read path
     def probe_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Fused probe of every SSTable filter for the whole batch in ONE
-        kernel launch -> (first_hit int32 [n] ∈ [0, N], hits_mask int32 [n]);
-        first_hit == N means no filter fired."""
-        keys = np.asarray(keys, dtype=np.uint64)
-        if not self.sstables:
-            raise RuntimeError("no SSTables; flush first")
-        hi, lo = H.np_split_u64(keys)
-        hi2d, lo2d, n = common.blockify(hi, lo)
-        first, mask = lsm_probe(self._tables_dev, jnp.asarray(hi2d),
-                                jnp.asarray(lo2d), chains=self._chains,
-                                interpret=self.interpret)
-        first, mask = jax.device_get((first, mask))   # one host pull for both
-        return first.reshape(-1)[:n], mask.reshape(-1)[:n]
+        """Fused probe of every SSTable filter of the CURRENT generation for
+        the whole batch in ONE kernel launch -> (first_hit int32 [n] ∈
+        [0, N], hits_mask int32 [n]); first_hit == N means no filter fired."""
+        return self._gen.probe_batch(keys, interpret=self.interpret)
 
-    def _resolve_chained(self, keys, first, found, vals, reads, idx):
+    def _resolve_chained(self, stats, sstables, keys, first, found, vals,
+                         reads, idx):
         """Chain rule (Fig 11b): read ONLY the newest-first first hit; a miss
         there proves every other fired filter is a false positive too.
         Tombstone records never fire chained filters (they are excluded at
         build and by ``exclude_deleted``), but a read landing on one is
         still resolved as a miss — the key is deleted."""
-        n_tables = len(self.sstables)
+        n_tables = len(sstables)
         hit = first < n_tables
         reads[idx[hit]] = 1
         for t in np.unique(first[hit]):
             sel = first == t
-            live, v, _dead = self.sstables[int(t)].get_many(keys[sel])
+            live, v, _dead = sstables[int(t)].get_many(keys[sel])
             found[idx[sel]] = live
             vals[idx[sel]] = v
-        self.stats.sstable_reads += int(hit.sum())
-        self.stats.wasted_reads += int(hit.sum() - found[idx].sum())
+        stats.sstable_reads += int(hit.sum())
+        stats.wasted_reads += int(hit.sum() - found[idx].sum())
 
-    def _resolve_masked(self, keys, mask, found, vals, reads, idx):
+    def _resolve_masked(self, stats, sstables, keys, mask, found, vals,
+                        reads, idx):
         """Baseline policy (per-table Bloom / no filter): read EVERY fired
         table newest→oldest until the key's newest record turns up — live
         (found) or tombstone (deleted; STOP, older versions are shadowed)."""
         alive = np.ones(len(keys), dtype=bool)
-        for t in range(len(self.sstables)):
+        for t in range(len(sstables)):
             cand = alive & (((mask >> t) & 1) == 1)
             if not cand.any():
                 continue
             reads[idx[cand]] += 1
-            self.stats.sstable_reads += int(cand.sum())
-            live, v, dead = self.sstables[t].get_many(keys[cand])
+            stats.sstable_reads += int(cand.sum())
+            live, v, dead = sstables[t].get_many(keys[cand])
             hit_idx = idx[cand][live]
             found[hit_idx] = True
             vals[hit_idx] = v[live]
             resolved = live | dead
-            self.stats.wasted_reads += int((~live).sum())
+            stats.wasted_reads += int((~live).sum())
             alive[cand] &= ~resolved
 
-    def get_batch(self, keys: np.ndarray
-                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Batched point queries -> (found bool [n], values uint64 [n],
-        sstable_reads int32 [n]). Memtable hits cost 0 reads; with chained
-        filters every other key costs ≤ 1 read (found or wasted)."""
+    def _view_get_batch(self, gen: Generation, mt_keys, mt_vals, mt_tombs,
+                        keys: np.ndarray, stats: StoreStats
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched point queries against ONE (generation, memtable image)
+        view — the shared resolution path for live reads (current
+        generation + live memtable, accounted in ``self.stats``) and
+        snapshot reads (pinned generation + frozen memtable copy,
+        accounted in ``self.snap_stats``)."""
         keys = np.asarray(keys, dtype=np.uint64)
         n = len(keys)
         found = np.zeros(n, dtype=bool)
         vals = np.zeros(n, dtype=np.uint64)
         reads = np.zeros(n, dtype=np.int32)
-        self.stats.gets += n
+        stats.gets += n
         if n == 0:
             return found, vals, reads
         resolved = np.zeros(n, dtype=bool)
-        if len(self._mt_keys):
-            mk = self._mt_keys
-            pos = np.minimum(np.searchsorted(mk, keys), len(mk) - 1)
-            inmem = mk[pos] == keys
+        if len(mt_keys):
+            pos = np.minimum(np.searchsorted(mt_keys, keys), len(mt_keys) - 1)
+            inmem = mt_keys[pos] == keys
             # a memtable tombstone RESOLVES the key (deleted, 0 reads) — it
             # must not fall through to the SSTables, whose stale versions it
             # shadows; live memtable hits resolve as found
-            live = inmem & ~self._mt_tombs[pos]
-            vals[live] = self._mt_vals[pos[live]]
+            live = inmem & ~mt_tombs[pos]
+            vals[live] = mt_vals[pos[live]]
             found |= live
             resolved |= inmem
-            self.stats.memtable_hits += int(inmem.sum())
+            stats.memtable_hits += int(inmem.sum())
         rest = ~resolved
-        if not rest.any() or not self.sstables:
+        if not rest.any() or not gen.sstables:
             return found, vals, reads
         idx = np.flatnonzero(rest)
         sub = keys[idx]
-        self.stats.probed += len(sub)
-        first, mask = self.probe_batch(sub)
+        stats.probed += len(sub)
+        first, mask = gen.probe_batch(sub, interpret=self.interpret)
         if self.filter_kind == "chained":
-            self._resolve_chained(sub, first, found, vals, reads, idx)
+            self._resolve_chained(stats, gen.sstables, sub, first, found,
+                                  vals, reads, idx)
         else:
-            self._resolve_masked(sub, mask, found, vals, reads, idx)
+            self._resolve_masked(stats, gen.sstables, sub, mask, found,
+                                 vals, reads, idx)
         return found, vals, reads
+
+    def get_batch(self, keys: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched point queries -> (found bool [n], values uint64 [n],
+        sstable_reads int32 [n]). Memtable hits cost 0 reads; with chained
+        filters every other key costs ≤ 1 read (found or wasted). The
+        generation is captured ONCE on entry, so a publish racing this call
+        can never tear it across two bank versions."""
+        return self._view_get_batch(self._gen, self._mt_keys, self._mt_vals,
+                                    self._mt_tombs, keys, self.stats)
 
     def get(self, key: int) -> tuple[bool, int, int]:
         """(found, value, reads) for one key."""
@@ -537,38 +755,31 @@ class LsmStore:
         return bool(f[0]), int(v[0]), int(r[0])
 
     # -------------------------------------------------------------- range scan
-    def scan(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
-        """Range scan over the half-open window ``[lo, hi)`` -> (keys
-        ascending uint64 [m], values uint64 [m]), live records only.
-        ``hi`` may be 2**64, so ``scan(0, 2**64)`` covers the whole key
-        space including the maximum uint64 key.
-
-        K-way merge across memtable + every SSTable with newest-wins /
-        tombstone masking: sources concatenate newest-first and one
-        ``np.unique`` (keeps the FIRST = newest record per key) resolves
-        shadowing, then tombstoned survivors drop out. Filters cannot prune
-        a range — a window is not a key — but each sorted run's min/max
-        fences can: tables whose span misses the window are never sliced."""
+    def _view_scan(self, gen: Generation, mt_keys, mt_vals, mt_tombs,
+                   lo: int, hi: int, stats: StoreStats
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Full-window k-way merge against ONE (generation, memtable image)
+        view — shared by live and snapshot scans."""
         lo_u, hi_u = int(lo), int(hi)
         if not (0 <= lo_u < 2 ** 64 and 0 <= hi_u <= 2 ** 64):
             raise ValueError("scan bounds: 0 <= lo < 2**64, 0 <= hi <= 2**64")
-        self.stats.scans += 1
+        stats.scans += 1
         parts_k, parts_v, parts_t = [], [], []
         if lo_u < hi_u:
-            if len(self._mt_keys):
+            if len(mt_keys):
                 # the memtable IS a sorted run — reuse the SSTable slicer
                 # (single home for the window-boundary logic, 2**64 incl.)
-                mt = SSTable(self._mt_keys, self._mt_vals, self._mt_tombs)
+                mt = SSTable(mt_keys, mt_vals, mt_tombs)
                 ks, vs, ts = mt.slice_range(lo_u, hi_u)
                 if len(ks):
                     parts_k.append(ks)
                     parts_v.append(vs)
                     parts_t.append(ts)
-            for t in self.sstables:                       # newest → oldest
+            for t in gen.sstables:                        # newest → oldest
                 if not t.overlaps_range(lo_u, hi_u):
-                    self.stats.scan_tables_pruned += 1
+                    stats.scan_tables_pruned += 1
                     continue
-                self.stats.scan_tables_read += 1
+                stats.scan_tables_read += 1
                 ks, vs, ts = t.slice_range(lo_u, hi_u)
                 parts_k.append(ks)
                 parts_v.append(vs)
@@ -579,6 +790,96 @@ class LsmStore:
         uk, first_idx = np.unique(cat_k, return_index=True)
         live = ~np.concatenate(parts_t)[first_idx]
         return uk[live], np.concatenate(parts_v)[first_idx][live]
+
+    def scan(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Range scan over the half-open window ``[lo, hi)`` -> (keys
+        ascending uint64 [m], values uint64 [m]), live records only.
+        ``hi`` may be 2**64, so ``scan(0, 2**64)`` covers the whole key
+        space including the maximum uint64 key.
+
+        K-way merge across memtable + every SSTable of the CURRENT
+        generation with newest-wins / tombstone masking: sources
+        concatenate newest-first and one ``np.unique`` (keeps the FIRST =
+        newest record per key) resolves shadowing, then tombstoned
+        survivors drop out. Filters cannot prune a range — a window is not
+        a key — but each sorted run's min/max fences can: tables whose span
+        misses the window are never sliced."""
+        return self._view_scan(self._gen, self._mt_keys, self._mt_vals,
+                               self._mt_tombs, lo, hi, self.stats)
+
+    def _view_scan_iter(self, gen: Generation, mt_keys, mt_vals, mt_tombs,
+                        lo: int, hi: int, page_size: int, stats: StoreStats):
+        """Lazy paged k-way merge against ONE pinned view (bounds validated
+        EAGERLY; this is a plain function returning the page generator, so
+        bad arguments fail at the call site, not at first iteration). Per
+        page each overlapping source contributes at most ``page_size``
+        physical records from the cursor position (``SSTable.slice_page``,
+        the single home for the window-boundary logic); the page's emit
+        bound is the smallest last-key among TRUNCATED slices, so every
+        emitted key's newest-wins resolution is complete before it leaves
+        the cursor. (Fence-prune accounting is left to full scans — a
+        cursor re-visits sources once per page and would skew the gated
+        prune fraction.)"""
+        lo_u, hi_u = int(lo), int(hi)
+        if not (0 <= lo_u < 2 ** 64 and 0 <= hi_u <= 2 ** 64):
+            raise ValueError("scan bounds: 0 <= lo < 2**64, 0 <= hi <= 2**64")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        stats.scans += 1
+        sources = []
+        if len(mt_keys):
+            sources.append(SSTable(mt_keys, mt_vals, mt_tombs))
+        sources.extend(gen.sstables)                      # newest → oldest
+
+        def pages():
+            pos = lo_u
+            while pos < hi_u:
+                parts_k, parts_v, parts_t = [], [], []
+                trunc_last = []
+                for t in sources:
+                    ks, vs, ts, trunc = t.slice_page(pos, hi_u, page_size)
+                    if not len(ks):
+                        continue
+                    parts_k.append(ks)
+                    parts_v.append(vs)
+                    parts_t.append(ts)
+                    if trunc is not None:
+                        trunc_last.append(trunc)
+                if not parts_k:
+                    return
+                bound = (hi_u if not trunc_last
+                         else min(hi_u, min(trunc_last) + 1))
+                cat_k = np.concatenate(parts_k)
+                uk, first_idx = np.unique(cat_k, return_index=True)
+                uv = np.concatenate(parts_v)[first_idx]
+                keep = ~np.concatenate(parts_t)[first_idx]
+                if bound < 2 ** 64:
+                    keep &= uk < np.uint64(bound)
+                if keep.any():
+                    yield uk[keep], uv[keep]
+                pos = bound
+
+        return pages()
+
+    def scan_iter(self, lo: int, hi: int, page_size: int = 4096
+                  ) -> _ScanCursor:
+        """Paged range-scan cursor over ``[lo, hi)``: an iterator of
+        ``(keys, vals)`` pages pinned to a snapshot opened EAGERLY at call
+        time (not at first iteration) — puts, deletes, flushes,
+        compactions and rebuilds between the call and any page cannot
+        change what the cursor yields; it finishes on its generation while
+        newer ones publish. The pin releases on exhaustion, ``close()``
+        (context-manager exit included), error, or — for an abandoned
+        cursor — garbage collection."""
+        snap = self.snapshot()
+        try:
+            inner = self._view_scan_iter(
+                snap.gen, snap._mt_keys, snap._mt_vals, snap._mt_tombs,
+                lo, hi, page_size, self.stats)
+        except Exception:
+            snap.close()
+            raise
+        return _ScanCursor(snap, inner)
 
     # ------------------------------------------------------------- accounting
     @property

@@ -9,7 +9,12 @@ the key outright — so any disagreement with ``repro.storage.LsmStore``
 a bug in the engine, not the model.
 
 The op surface mirrors the store exactly: within-batch newest-wins for
-puts, half-open ``[lo, hi)`` range scans returning ascending keys.
+puts, half-open ``[lo, hi)`` range scans returning ascending keys, and
+``snapshot()`` — a FROZEN full copy of the dict at open time
+(``ReferenceSnapshot``), the oracle for the store's generation-pinned
+snapshot handles: whatever puts/deletes/flushes/compactions land between
+open and close, the snapshot's gets and scans must keep answering from
+the copy, bit-exactly.
 """
 from __future__ import annotations
 
@@ -69,6 +74,11 @@ class ReferenceStore:
         vals = np.array([self._data[int(k)] for k in window], dtype=np.uint64)
         return window, vals.reshape(-1)
 
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self) -> "ReferenceSnapshot":
+        """Frozen point-in-time copy: the oracle for LsmStore.snapshot()."""
+        return ReferenceSnapshot(self._data)
+
     # ------------------------------------------------------------ inspection
     @property
     def keys_sorted(self) -> np.ndarray:
@@ -80,3 +90,24 @@ class ReferenceStore:
 
     def __len__(self) -> int:
         return len(self._data)
+
+
+class ReferenceSnapshot(ReferenceStore):
+    """A ReferenceStore frozen at open time: shares the read surface
+    (``get_batch``/``scan``) over a private dict COPY, refuses writes, and
+    carries the same ``close`` lifecycle as the engine handle (a semantic
+    no-op — the model has no pins to release)."""
+
+    def __init__(self, data: dict):
+        super().__init__()
+        self._data = dict(data)
+        self.closed = False
+
+    def put_batch(self, *a, **kw):
+        raise RuntimeError("snapshots are read-only")
+
+    def delete_batch(self, *a, **kw):
+        raise RuntimeError("snapshots are read-only")
+
+    def close(self) -> None:
+        self.closed = True

@@ -1,13 +1,21 @@
 """Stateful differential suite: LsmStore vs the ReferenceStore oracle.
 
-Random interleavings of put / delete / get / scan / flush / compact are
-fired at the batched engine and the trivially-correct dict model in
-lockstep (tests/model.py); every get and scan must agree **bit-exactly**
-— found flags, values, scan windows — for all three filter kinds
-(``chained`` / ``bloom`` / ``none``). This is the harness that proves the
-tombstone-delete and range-scan machinery (flush-time exclusions,
-compaction GC, fence pruning, newest-wins masking) is observationally
-invisible.
+Random interleavings of put / delete / get / scan / flush / compact /
+snapshot_open / snapshot_get / snapshot_scan / snapshot_close are fired
+at the batched engine and the trivially-correct dict model in lockstep
+(tests/model.py); every get and scan — live OR through an open snapshot
+pair — must agree **bit-exactly** (found flags, values, scan windows) for
+all three filter kinds (``chained`` / ``bloom`` / ``none``). This is the
+harness that proves the tombstone-delete, range-scan AND
+generation/snapshot machinery (flush-time exclusions, compaction GC with
+snapshot-deferred tombstones, fence pruning, newest-wins masking,
+double-buffered bank publishes) is observationally invisible.
+
+Snapshot ops drive the consistency gap the generation subsystem closes:
+puts/deletes/flushes/compactions land BETWEEN snapshot open and close,
+and the pinned handle must keep answering from its open-time state — the
+dict oracle keeps a frozen per-snapshot copy (``ReferenceSnapshot``) to
+check against.
 
 Each interleaving is derived from ONE integer seed (hypothesis-drawn), so
 a failure is replayable from the ``kind=... seed=... step=...`` tag every
@@ -17,11 +25,16 @@ filter kind (nightly lane).
 
 Chained stores additionally assert after every final flush:
 
-- the ≤ 1 SSTable-read bound on every get (the paper's §5.4 contract);
+- the ≤ 1 SSTable-read bound on every get (the paper's §5.4 contract) —
+  snapshot gets included (pinned filters are exact over pinned tables);
 - the exclusion-set invariant: no key that is deleted (and not since
   re-inserted) remains ENROLLED as a stage-2 positive in ANY table's
   filter — tombstones must never burn filter space or short-circuit the
   fused probe's first-hit mask.
+
+Every run finishes with all snapshots verified once more and closed, and
+asserts the store leaks no pins (``open_snapshots == 0``,
+``pinned_generations == {}``).
 """
 import numpy as np
 from hypothesis import given, settings, strategies as st
@@ -58,18 +71,22 @@ def _scan_bounds(rng):
 
 
 def _check_scan(store, model, lo, hi, msg):
+    """``store``/``model`` may be live stores OR an (engine, oracle)
+    snapshot pair — both expose the same scan surface."""
     got_k, got_v = store.scan(lo, hi)
     exp_k, exp_v = model.scan(lo, hi)
     np.testing.assert_array_equal(got_k, exp_k, err_msg=f"{msg} scan keys")
     np.testing.assert_array_equal(got_v, exp_v, err_msg=f"{msg} scan vals")
 
 
-def _check_get(store, model, keys, msg):
+def _check_get(store, model, keys, msg, *, chained=None):
     found, vals, reads = store.get_batch(keys)
     exp_found, exp_vals = model.get_batch(keys)
     np.testing.assert_array_equal(found, exp_found, err_msg=f"{msg} found")
     np.testing.assert_array_equal(vals, exp_vals, err_msg=f"{msg} vals")
-    if store.filter_kind == "chained":
+    if chained is None:
+        chained = store.filter_kind == "chained"
+    if chained:
         assert (reads <= 1).all(), f"{msg}: chained read bound violated"
 
 
@@ -88,6 +105,9 @@ def _assert_exclusion_sets(store, model, ever_deleted, msg):
             f"{msg}: table {t} still enrolls deleted keys {enrolled[:5]}")
 
 
+MAX_OPEN_SNAPSHOTS = 4          # bounds pinned generations per interleaving
+
+
 def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
                      get_cap: int = 48) -> None:
     """Replay one seeded random interleaving against store + oracle."""
@@ -103,10 +123,14 @@ def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
         auto_compact=bool(rng.random() < 0.7))
     model = ReferenceStore()
     ever_deleted: set[int] = set()
+    chained = filter_kind == "chained"
+    snaps: list[tuple] = []         # (engine Snapshot, ReferenceSnapshot)
     n_steps = int(rng.integers(6, max_steps + 1))
     ops = rng.choice(
-        ["put", "delete", "get", "scan", "flush", "compact"],
-        size=n_steps, p=[0.30, 0.18, 0.22, 0.12, 0.12, 0.06])
+        ["put", "delete", "get", "scan", "flush", "compact",
+         "snap_open", "snap_get", "snap_scan", "snap_close"],
+        size=n_steps,
+        p=[0.24, 0.14, 0.17, 0.09, 0.10, 0.05, 0.08, 0.05, 0.05, 0.03])
     for step, op in enumerate(ops):
         msg = f"[differential kind={filter_kind} seed={seed} step={step} op={op}]"
         if op == "put":
@@ -128,13 +152,42 @@ def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
         elif op == "flush":
             store.flush()
             model.flush()
-        else:
+        elif op == "compact":
             store.compact()
             model.compact()
+        elif op == "snap_open":
+            if len(snaps) < MAX_OPEN_SNAPSHOTS:
+                snaps.append((store.snapshot(), model.snapshot()))
+        elif op == "snap_get" and snaps:
+            s_snap, m_snap = snaps[int(rng.integers(0, len(snaps)))]
+            _check_get(s_snap, m_snap,
+                       _mixed_keys(rng, int(rng.integers(1, get_cap))),
+                       msg, chained=chained)
+        elif op == "snap_scan" and snaps:
+            s_snap, m_snap = snaps[int(rng.integers(0, len(snaps)))]
+            lo, hi = _scan_bounds(rng)
+            _check_scan(s_snap, m_snap, lo, hi, msg)
+        elif op == "snap_close" and snaps:
+            s_snap, m_snap = snaps.pop(int(rng.integers(0, len(snaps))))
+            # exit check: the snapshot still answers from its open-time
+            # state no matter what landed since
+            _check_get(s_snap, m_snap, _mixed_keys(rng, 24), msg,
+                       chained=chained)
+            _check_scan(s_snap, m_snap, *FULL_RANGE, msg)
+            s_snap.close()
+            m_snap.close()
     # final sweep on fully-flushed state: total point/range agreement plus
-    # the chained exclusion-set invariant
+    # the chained exclusion-set invariant; every still-open snapshot must
+    # have survived the whole interleaving and release its pin cleanly
     msg = f"[differential kind={filter_kind} seed={seed} final]"
     store.flush()
+    for s_snap, m_snap in snaps:
+        _check_get(s_snap, m_snap, _UNIVERSE, msg, chained=chained)
+        _check_scan(s_snap, m_snap, *FULL_RANGE, msg)
+        s_snap.close()
+        m_snap.close()
+    assert store.open_snapshots == 0, f"{msg}: leaked open snapshots"
+    assert store.pinned_generations == {}, f"{msg}: leaked generation pins"
     _check_get(store, model, _UNIVERSE, msg)
     _check_scan(store, model, *FULL_RANGE, msg)
     if filter_kind == "chained":
