@@ -10,8 +10,10 @@ the committed baseline: higher-is-better metrics fail below
 ``(1 + tol) * baseline``. Metrics missing from the baseline (newly added
 benchmarks) WARN and pass, so adding a metric never blocks the PR that
 introduces it; metrics missing from the results FAIL (a silently dropped
-benchmark is a regression). Exit code 1 on any failure — wired into the
-nightly CI lane after ``benchmarks.run``.
+benchmark is a regression). Results sections that NO benchmark registered
+in ``benchmarks.run`` produces WARN as stale — numbers nothing
+regenerates must not masquerade as gated coverage. Exit code 1 on any
+failure — wired into the nightly CI lane after ``benchmarks.run``.
 
 Refresh the baseline intentionally, never implicitly:
     PYTHONPATH=src python -m benchmarks.run && cp BENCH_results.json BENCH_baseline.json
@@ -55,7 +57,26 @@ GATES = [
     # to ~1.0, four orders past the tolerance band.
     ("snapshot_compact (generations + snapshot-pinned scans)",
      "publish_stall_p99_frac", "lower"),
+    # query pipelines (ISSUE 6): both metrics are seed-deterministic
+    # fractions, not wall-clock. survivor_reduction_frac: the fused
+    # cascade's stage-key evaluations must stay well below the naive
+    # every-predicate-probes-everything plan; semijoin_candidate_reduction:
+    # the next relation's bank prune must keep eliminating candidates
+    # before materialization pays SSTable reads. The wall-clock
+    # cascade_speedup rides along in the metrics but is not gated.
+    ("query_pipeline (filter-pushdown query plans)",
+     "survivor_reduction_frac", "higher"),
+    ("query_pipeline (filter-pushdown query plans)",
+     "semijoin_candidate_reduction", "higher"),
 ]
+
+
+def stale_sections(results: dict) -> list:
+    """Results-file sections no benchmark registered in ``benchmarks.run``
+    produces — leftovers of removed/renamed benchmarks. They carry numbers
+    nothing regenerates, so they can masquerade as coverage; WARN loudly."""
+    from .run import REGISTERED_NAMES
+    return sorted(k for k in results if k not in REGISTERED_NAMES)
 
 
 def _lookup(results: dict, bench: str, key: str):
@@ -110,6 +131,10 @@ def main(argv=None) -> int:
     except OSError as e:
         print(f"cannot read baseline: {e} — all gates WARN")
         baseline = {}
+    for name in stale_sections(results):
+        print(f"  WARN  stale results section {name!r}: not produced by "
+              f"any benchmark registered in benchmarks.run — regenerate "
+              f"{args.results} and refresh {args.baseline}")
     failures = compare(results, baseline, args.tolerance)
     if failures:
         print(f"{failures} gated metric(s) regressed > "

@@ -7,46 +7,57 @@ table from dry-run artifacts + the serving FilterBank probe bench.
 Each benchmark's ``run()`` returns either a printable string or a
 ``(string, metrics_dict)`` pair; numbers land in ``BENCH_results.json``
 (uploaded as a CI artifact by the bench-smoke job).
+
+``REGISTRY`` is the single source of truth for what this driver produces:
+modules import lazily inside ``main`` so tooling (``benchmarks.compare``'s
+stale-section check) can enumerate the registered names without paying
+for jax imports.
 """
 from __future__ import annotations
 
+import importlib
 import json
 import sys
 import time
 import traceback
 
-import jax.numpy as jnp
-
 RESULTS_PATH = "BENCH_results.json"
+
+# (results-section name, module under benchmarks/) — every section a run
+# writes comes from exactly one entry here; compare.py warns on results
+# sections with no registered producer (stale artifacts from removed or
+# renamed benchmarks).
+REGISTRY = [
+    ("chain_rule (§2)", "chain_rule"),
+    ("static_dictionary (§5.1, Fig 6/7)", "static_dictionary"),
+    ("huffman (§5.2, Fig 8)", "huffman"),
+    ("adaptive_hashing (§5.3, Tab 3/Fig 10)", "adaptive_hashing"),
+    ("lsm_pointquery (§5.4, Fig 12)", "lsm_pointquery"),
+    ("lsm_store (batched storage engine)", "lsm_store"),
+    ("write_path (bulk-synchronous ingest)", "write_path"),
+    ("scan_delete (range scans + tombstone deletes)", "scan_delete"),
+    ("snapshot_compact (generations + snapshot-pinned scans)",
+     "snapshot_compact"),
+    ("query_pipeline (filter-pushdown query plans)", "query_pipeline"),
+    ("learned_filter (§5.5, Fig 13)", "learned_filter"),
+    ("roofline (dry-run artifacts)", "roofline"),
+    ("filter_service (fused cascade vs per-layer)", "filter_service"),
+]
+
+REGISTERED_NAMES = frozenset(name for name, _ in REGISTRY)
 
 
 def main() -> int:
+    import jax.numpy as jnp
     from repro.models import common as MC
     MC.set_compute_dtype(jnp.float32)        # CPU execution dtype
 
-    from . import (chain_rule, static_dictionary, huffman, adaptive_hashing,
-                   lsm_pointquery, lsm_store, learned_filter, roofline,
-                   filter_service, write_path, scan_delete, snapshot_compact)
-    benches = [
-        ("chain_rule (§2)", chain_rule.run),
-        ("static_dictionary (§5.1, Fig 6/7)", static_dictionary.run),
-        ("huffman (§5.2, Fig 8)", huffman.run),
-        ("adaptive_hashing (§5.3, Tab 3/Fig 10)", adaptive_hashing.run),
-        ("lsm_pointquery (§5.4, Fig 12)", lsm_pointquery.run),
-        ("lsm_store (batched storage engine)", lsm_store.run),
-        ("write_path (bulk-synchronous ingest)", write_path.run),
-        ("scan_delete (range scans + tombstone deletes)", scan_delete.run),
-        ("snapshot_compact (generations + snapshot-pinned scans)",
-         snapshot_compact.run),
-        ("learned_filter (§5.5, Fig 13)", learned_filter.run),
-        ("roofline (dry-run artifacts)", roofline.run),
-        ("filter_service (fused cascade vs per-layer)", filter_service.run),
-    ]
     failures = 0
     results: dict = {}
-    for name, fn in benches:
+    for name, module in REGISTRY:
         t0 = time.perf_counter()
         try:
+            fn = importlib.import_module(f".{module}", __package__).run
             out = fn()
             metrics = None
             if isinstance(out, tuple):

@@ -1,4 +1,4 @@
 from .prefix_cache import TieredPrefixCache, TierSpec
 from .engine import ServeEngine, Request
-from .filter_service import FilterBank, FilterService, bank_probe
+from .filter_service import FilterBank, FilterService, BankRegistry, bank_probe
 

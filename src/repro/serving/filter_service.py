@@ -345,3 +345,49 @@ class FilterService:
 
     def unpack(self) -> list:
         return self.bank.unpack()
+
+
+# ---------------------------------------------------------------------------
+# BankRegistry — named multi-tenant FilterServices
+# ---------------------------------------------------------------------------
+
+class BankRegistry:
+    """Named FilterServices under one roof — the multi-tenant bank surface.
+
+    One serving process holds many independent banks: per-collection LSM
+    probe banks, per-index tag-retrieval banks, prefix-cache tiers. The
+    registry maps stable names ("collection/index") to their services so
+    the query layer can resolve banks by name, enumerate them, and
+    aggregate stats without threading service handles through every plan.
+    Registration is by reference — rebuilds/publishes on the service are
+    visible immediately; the registry never copies bank state."""
+
+    def __init__(self):
+        self._services: dict[str, FilterService] = {}
+
+    def register(self, name: str, service: FilterService) -> None:
+        if name in self._services:
+            raise ValueError(f"bank {name!r} already registered")
+        self._services[name] = service
+
+    def unregister(self, name: str) -> None:
+        del self._services[name]
+
+    def get(self, name: str) -> FilterService:
+        try:
+            return self._services[name]
+        except KeyError:
+            raise KeyError(
+                f"no bank named {name!r}; registered: {self.names()}"
+            ) from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._services
+
+    def names(self) -> list[str]:
+        return sorted(self._services)
+
+    def stats(self) -> dict:
+        """{name: per-service stats dict} across every registered bank."""
+        return {name: svc.stats.as_dict()
+                for name, svc in sorted(self._services.items())}

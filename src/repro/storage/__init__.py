@@ -19,11 +19,11 @@ from .generation import Generation, Snapshot
 from .lsm_store import LsmStore, StoreStats
 from .workloads import (WorkloadOp, LatencyAccountant, uniform_write_heavy,
                         zipfian_read_heavy, mixed_read_write, crud_mixed,
-                        run_workload)
+                        tagged_query, run_workload)
 
 __all__ = [
     "Generation", "Snapshot",
     "LsmStore", "StoreStats", "WorkloadOp", "LatencyAccountant",
     "uniform_write_heavy", "zipfian_read_heavy", "mixed_read_write",
-    "crud_mixed", "run_workload",
+    "crud_mixed", "tagged_query", "run_workload",
 ]

@@ -98,6 +98,27 @@ class Generation:
     def n_tables(self) -> int:
         return len(self.sstables)
 
+    def live_items(self) -> tuple[np.ndarray, np.ndarray]:
+        """(keys ascending uint64 [m], values uint64 [m]) — every LIVE
+        record of this generation after newest-wins / tombstone masking.
+
+        The probe-only enrollment view: secondary-index builders (the query
+        layer's tag banks) read the rows they must enroll from HERE, never
+        from the store's private build-side lists, so enrollment observes
+        exactly what readers of this generation observe."""
+        if not self.sstables:
+            return np.empty(0, np.uint64), np.empty(0, np.uint64)
+        cat_k = np.concatenate([t.keys for t in self.sstables])  # newest 1st
+        cat_v = np.concatenate([
+            t.vals if t.vals is not None else np.zeros(len(t.keys), np.uint64)
+            for t in self.sstables])
+        cat_t = np.concatenate([
+            t.tombs if t.tombs is not None else np.zeros(len(t.keys), bool)
+            for t in self.sstables])
+        uk, first_idx = np.unique(cat_k, return_index=True)
+        live = ~cat_t[first_idx]
+        return uk[live], cat_v[first_idx][live]
+
     def probe_batch(self, keys: np.ndarray, *, interpret: bool = True
                     ) -> tuple[np.ndarray, np.ndarray]:
         """Fused probe of every SSTable filter of THIS generation for the
@@ -136,6 +157,34 @@ class Snapshot:
         self._mt_vals = mt_vals
         self._mt_tombs = mt_tombs
         self.closed = False
+
+    @property
+    def gen_id(self) -> int:
+        """The pinned generation's id — the cheap fence a multi-store query
+        plan records at open time to prove no publish tore its view."""
+        return self.gen.gen_id
+
+    def memtable_probe(self, keys: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(inmem bool [n], live bool [n], values uint64 [n]) against the
+        FROZEN memtable image only — the overlay half of the probe-only
+        view API: a query stage consults this before the pinned
+        generation's filter bank, because a memtable record (live or
+        tombstone) shadows every generation-resident version of its key."""
+        self._check_open()
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = len(keys)
+        inmem = np.zeros(n, dtype=bool)
+        vals = np.zeros(n, dtype=np.uint64)
+        if n and len(self._mt_keys):
+            pos = np.minimum(np.searchsorted(self._mt_keys, keys),
+                             len(self._mt_keys) - 1)
+            inmem = self._mt_keys[pos] == keys
+            live = inmem & ~self._mt_tombs[pos]
+            vals[live] = self._mt_vals[pos[live]]
+        else:
+            live = np.zeros(n, dtype=bool)
+        return inmem, live, vals
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:

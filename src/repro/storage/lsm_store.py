@@ -188,6 +188,11 @@ class LsmStore:
         # build-side copies every mutation path edits before one publish.
         self._gen = Generation.empty(0)
         self._next_gen_id = 1
+        # publish hooks: called AFTER each generation swap with the newly
+        # published Generation — the secondary-index enrollment point (the
+        # query layer's tag banks rebuild here, reading live rows through
+        # Generation.live_items, never the private build-side lists)
+        self._on_publish: list = []
         self._snapshots: list[Snapshot] = []      # open handles, any order
         self._pinned: dict[int, int] = {}         # gen_id -> snapshot refs
         self._gc_pending = False                  # deferred tombstones exist
@@ -562,6 +567,18 @@ class LsmStore:
             sum(f.bits for f in live))
         self._next_gen_id += 1
         self.stats.generations_published += 1
+        for hook in self._on_publish:
+            hook(self, self._gen)
+
+    def add_publish_hook(self, hook) -> None:
+        """Register ``hook(store, generation)`` to run after EVERY publish
+        (flush / compact / deferred-GC sweep), with the new generation
+        already installed. Secondary indexes enroll here: one hook call per
+        swap means a tag bank can never lag the generation it serves."""
+        self._on_publish.append(hook)
+
+    def remove_publish_hook(self, hook) -> None:
+        self._on_publish.remove(hook)
 
     @property
     def generation(self) -> Generation:

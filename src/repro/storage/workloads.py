@@ -21,6 +21,9 @@ Four shapes, mirroring the YCSB-style mixes LSM papers benchmark:
 - ``crud_mixed``            — full put/get/delete/scan traffic; the
   tombstone-exclusion and fence-pruning exerciser (deleted keys must cost
   0 reads on a chained store, ranges prune by min/max fences).
+- ``tagged_query``          — Zipf-ranked candidate batches each carrying
+  a predicate list (tag equality / tag sets / range fences) in the query
+  layer's spec-tuple form; the predicate-pipeline exerciser.
 
 ``LatencyAccountant`` converts per-get SSTable read counts to microseconds
 with the calibrated ``core.lsm.latency_model`` and reports the Fig-12
@@ -38,11 +41,13 @@ from repro.core.lsm import latency_model
 
 @dataclass(frozen=True)
 class WorkloadOp:
-    kind: str                       # 'put' | 'get' | 'del' | 'scan'
+    kind: str                       # 'put' | 'get' | 'del' | 'scan' | 'query'
     keys: np.ndarray                # uint64 [batch] (empty for scans)
     vals: np.ndarray | None = None  # uint64 [batch] for puts
     lo: int = 0                     # scan window [lo, hi)
     hi: int = 0
+    stages: tuple = ()              # query ops: pipeline stage specs, the
+    #                                 tuple form of query.stages_from_specs
 
 
 def _key_universe(n: int, seed: int) -> np.ndarray:
@@ -179,6 +184,51 @@ def crud_mixed(n_ops: int, batch: int = 256, read_frac: float = 0.35,
     return ops
 
 
+def tagged_query(n_ops: int, batch: int = 256, n_keys: int = 8192,
+                 theta: float = 1.1, tag_bits: int = 4, index: str = "tags",
+                 max_stages: int = 3, write_frac: float = 0.1,
+                 seed: int = 0) -> list[WorkloadOp]:
+    """Predicate-pipeline traffic: Zipf(θ)-ranked candidate keys, each op
+    carrying a 1..``max_stages``-deep predicate list drawn over tag
+    equality / tag sets / key-range fences (spec tuples — feed them to
+    ``query.Pipeline.from_specs``). A ``write_frac`` share of overwrite
+    batches keeps the secondary-index enrollment path hot while queries
+    run. Kind flips, key draws and predicate draws are three independent
+    seeded streams, same replay contract as the CRUD mixes."""
+    rng_kind, rng_keys, rng_pred = _phase_rngs(seed + 5, "kind", "keys",
+                                               "preds")
+    universe = np.sort(_key_universe(n_keys, seed))
+    weights = _zipf_weights(n_keys, theta)
+    n_tags = 1 << tag_bits
+    ops: list[WorkloadOp] = []
+    for start in range(0, n_keys, batch):
+        keys = universe[start:start + batch]
+        ops.append(WorkloadOp("put", keys, keys >> np.uint64(17)))
+    for _ in range(n_ops):
+        keys = rng_keys.choice(universe, size=batch, p=weights)
+        if rng_kind.random() < write_frac:
+            ops.append(WorkloadOp("put", keys, keys + np.uint64(1)))
+            continue
+        stages = []
+        for _ in range(int(rng_pred.integers(1, max_stages + 1))):
+            r = rng_pred.random()
+            if r < 0.5:
+                stages.append(("tag_eq", index,
+                               int(rng_pred.integers(0, n_tags))))
+            elif r < 0.8:
+                a = int(rng_pred.integers(0, n_keys - 1))
+                span = max(1, int(n_keys * 0.2))
+                b = min(n_keys - 1, a + span)
+                stages.append(("range", int(universe[a]), int(universe[b])))
+            else:
+                k = int(rng_pred.integers(1, max(2, n_tags // 2)))
+                tags = rng_pred.choice(n_tags, size=k, replace=False)
+                stages.append(("tag_in", index,
+                               tuple(int(t) for t in np.sort(tags))))
+        ops.append(WorkloadOp("query", keys, stages=tuple(stages)))
+    return ops
+
+
 @dataclass
 class LatencyAccountant:
     """Accumulates per-get SSTable read counts; reports the calibrated
@@ -187,31 +237,50 @@ class LatencyAccountant:
     probes_cost_us: float = 2.0
     read_cost_us: float = 9.0
     reads: list = field(default_factory=list)
+    stage_counts: list = field(default_factory=list)   # one tuple per plan
 
     def record(self, reads: np.ndarray) -> None:
         self.reads.append(np.asarray(reads, dtype=np.int64))
 
+    def record_stages(self, survivors) -> None:
+        """Per-stage survivor counts of one executed plan, cascade order
+        (the fused-probe cost model: stage i+1 pays survivors[i] keys)."""
+        self.stage_counts.append(tuple(int(s) for s in survivors))
+
     def report(self) -> dict:
-        if not self.reads:
+        if not self.reads and not self.stage_counts:
             return {"n": 0}
-        reads = np.concatenate(self.reads)
-        lat = latency_model(reads, probes_cost_us=self.probes_cost_us,
-                            read_cost_us=self.read_cost_us)
-        return {
-            "n": int(len(reads)),
-            "avg_reads": float(reads.mean()),
-            "max_reads": int(reads.max()),
-            "p50_us": float(np.percentile(lat, 50)),
-            "p95_us": float(np.percentile(lat, 95)),
-            "p99_us": float(np.percentile(lat, 99)),
-        }
+        out: dict = {"n": 0}
+        if self.reads:
+            reads = np.concatenate(self.reads)
+            lat = latency_model(reads, probes_cost_us=self.probes_cost_us,
+                                read_cost_us=self.read_cost_us)
+            out.update({
+                "n": int(len(reads)),
+                "avg_reads": float(reads.mean()),
+                "max_reads": int(reads.max()),
+                "p50_us": float(np.percentile(lat, 50)),
+                "p95_us": float(np.percentile(lat, 95)),
+                "p99_us": float(np.percentile(lat, 99)),
+            })
+        if self.stage_counts:
+            depth = max(len(c) for c in self.stage_counts)
+            out["plans"] = len(self.stage_counts)
+            out["stage_survivors"] = [
+                int(sum(c[i] for c in self.stage_counts if i < len(c)))
+                for i in range(depth)]
+        return out
 
 
 def run_workload(store, ops: list[WorkloadOp],
-                 accountant: LatencyAccountant | None = None) -> dict:
+                 accountant: LatencyAccountant | None = None,
+                 query_fn=None) -> dict:
     """Replay a workload against an ``LsmStore``; returns the accountant
     report plus hit-rate. The store's own ``stats`` keep the read/probe
-    totals."""
+    totals. ``query`` ops dispatch to ``query_fn(op) -> PlanResult``
+    (typically a closure over a ``query.Collection`` wrapping the same
+    store); each plan's per-candidate reads and per-stage survivor counts
+    feed the accountant."""
     accountant = accountant or LatencyAccountant()
     n_found = n_get = 0
     n_scanned = 0
@@ -223,6 +292,15 @@ def run_workload(store, ops: list[WorkloadOp],
         elif op.kind == "scan":
             ks, _ = store.scan(op.lo, op.hi)
             n_scanned += len(ks)
+        elif op.kind == "query":
+            if query_fn is None:
+                raise ValueError("workload contains query ops but no "
+                                 "query_fn was supplied")
+            res = query_fn(op)
+            accountant.record(res.reads)
+            accountant.record_stages(res.survivor_counts)
+            n_found += len(res.keys)
+            n_get += len(op.keys)
         else:
             found, _, reads = store.get_batch(op.keys)
             accountant.record(reads)

@@ -111,3 +111,104 @@ class ReferenceSnapshot(ReferenceStore):
 
     def close(self) -> None:
         self.closed = True
+
+
+def _plan_arrays(ref, specs, keys=None):
+    """Evaluate a stage-spec plan over a reference read surface ->
+    (candidate keys, values, keep mask). Conjunctive and order-free by
+    construction: membership (implicit for every plan), range windows and
+    tag predicates are ANDed per key — the semantics the engine's
+    survivor-flow cascade must reproduce bit-exactly in any stage order."""
+    if keys is None:
+        if not specs or specs[0][0] != "range":
+            raise ValueError("scan-driven plans need a leading range spec")
+        keys, vals = ref.scan(specs[0][1], specs[0][2])
+        found = np.ones(len(keys), dtype=bool)
+    else:
+        keys = np.asarray(keys, dtype=np.uint64)
+        found, vals = ref.get_batch(keys)
+    keep = found.copy()               # every plan ends membership-resolved
+    for spec in specs:
+        kind = spec[0]
+        if kind == "member":
+            pass                      # already folded into ``found``
+        elif kind == "range":
+            lo, hi = spec[1], spec[2]
+            m = keys >= np.uint64(max(0, lo))
+            if hi < 2 ** 64:
+                m &= keys < np.uint64(max(0, hi))
+            keep &= m
+        elif kind in ("tag_eq", "tag_in"):
+            tags = ref.tag_fns[spec[1]](keys, vals)
+            if kind == "tag_eq":
+                m = tags == np.uint64(spec[2])
+            else:
+                m = np.isin(tags, np.unique(np.asarray(spec[2], np.uint64)))
+            keep &= m                 # tag of a non-found key is irrelevant:
+            #                           keep already requires ``found``
+        else:
+            raise ValueError(f"unknown stage spec {spec!r}")
+    return keys, vals, keep
+
+
+def reference_plan(ref, specs, keys=None):
+    """(surviving keys, values) of a predicate-pipeline plan — the oracle
+    for ``repro.query.Pipeline`` results (candidate order preserved)."""
+    ks, vs, keep = _plan_arrays(ref, specs, keys)
+    return ks[keep], vs[keep]
+
+
+def reference_semijoin(base_ref, base_specs, keys, joins):
+    """Oracle for ``repro.query.SemiJoin``: run the base plan, then AND
+    each join step's keep-mask over the mapped join keys. ``joins`` is a
+    list of ``(right_ref, key_fn | None, right_specs)``. Returns
+    (keys, vals, [right_vals per step]) aligned like SemiJoinResult."""
+    k, v = reference_plan(base_ref, base_specs, keys)
+    right_vals: list[np.ndarray] = []
+    for right, key_fn, rspecs in joins:
+        jk = np.asarray(key_fn(k, v), np.uint64) if key_fn is not None else k
+        _, rv, rkeep = _plan_arrays(right, rspecs, jk)
+        k, v = k[rkeep], v[rkeep]
+        right_vals = [r[rkeep] for r in right_vals]
+        right_vals.append(rv[rkeep])
+    return k, v, right_vals
+
+
+class ReferenceCollection(ReferenceStore):
+    """ReferenceStore + named tag functions: the oracle counterpart of
+    ``query.Collection``. ``create_index`` registers the SAME ``tag_fn``
+    the engine's TagIndex enrolls (masked to ``tag_bits``), so tag
+    predicates evaluate the identical ground-truth function on dict
+    state instead of retrieval planes."""
+
+    def __init__(self):
+        super().__init__()
+        self.tag_fns: dict = {}
+
+    def create_index(self, name: str, tag_fn, tag_bits: int = 4) -> None:
+        mask = np.uint64((1 << tag_bits) - 1)
+
+        def masked(keys, vals, _fn=tag_fn, _m=mask):
+            tags = np.asarray(_fn(np.asarray(keys, np.uint64),
+                                  np.asarray(vals, np.uint64)))
+            return tags.astype(np.uint64) & _m
+
+        self.tag_fns[name] = masked
+
+    def snapshot(self) -> "ReferenceCollectionSnapshot":
+        snap = ReferenceCollectionSnapshot(self._data)
+        snap.tag_fns = dict(self.tag_fns)   # indexes frozen at open, too
+        return snap
+
+    def plan(self, specs, keys=None):
+        return reference_plan(self, specs, keys)
+
+
+class ReferenceCollectionSnapshot(ReferenceSnapshot):
+    """Frozen ReferenceCollection: the oracle for plans pinned across
+    later mutations/flushes/compactions of the live collection."""
+
+    tag_fns: dict = {}
+
+    def plan(self, specs, keys=None):
+        return reference_plan(self, specs, keys)

@@ -1,0 +1,340 @@
+"""Behavioral suite for the filter-pushdown query subsystem.
+
+Covers the contracts the query layer adds on top of the (differentially
+proven) storage engine:
+
+- degeneracy: a single-``Member``-stage plan is bit-identical to a raw
+  ``get_batch`` — found set, values AND per-candidate read counts — for
+  every filter kind;
+- conjunctive stage reordering never changes the final survivor set
+  (stage verdicts are pure per (key, pinned view));
+- a tag-bank probe after delete + compact never returns a dead key, for
+  any queried tag (retrieval noise on non-enrolled keys must be killed
+  by the plan's membership resolution);
+- plans straddling flush/compact are snapshot-pinned: results match an
+  oracle frozen at open time, and the recorded gen-id fences prove the
+  view never moved;
+- semijoin pruning matches the dict oracle and actually reduces the
+  materialized candidate set;
+- secondary-index enrollment rides every publish, retains bank states
+  for pinned generations only, and registers banks in the catalog's
+  ``BankRegistry``;
+- the ``tagged_query`` workload generator + accountant survivor-count
+  plumbing (satellite: per-stage survivor reporting).
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import hashing as H
+from repro.query import (Catalog, JoinStep, Member, Pipeline, RangeFence,
+                         SemiJoin, TagEq, TagIn)
+from repro.storage import LatencyAccountant, run_workload, tagged_query
+
+from model import ReferenceCollection, reference_semijoin
+
+KINDS = ("chained", "bloom", "none")
+TAG_BITS = 4
+N_TAGS = 1 << TAG_BITS
+
+
+def tag_fn(keys, vals):
+    return vals & np.uint64(N_TAGS - 1)
+
+
+def _mk(kind, n=320, seed=9, memtable_capacity=96):
+    """Catalog collection + lockstep oracle, loaded and flushed."""
+    cat = Catalog()
+    coll = cat.create_collection("c", filter_kind=kind, seed=seed,
+                                 memtable_capacity=memtable_capacity)
+    coll.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    ref = ReferenceCollection()
+    ref.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    rng = np.random.default_rng(seed)
+    keys = H.random_keys(n, seed=seed + 1)
+    vals = rng.integers(1, 2 ** 60, n, dtype=np.uint64)
+    coll.store.put_batch(keys, vals)
+    ref.put_batch(keys, vals)
+    coll.store.flush()
+    return cat, coll, ref, keys, vals
+
+
+def _mixed_candidates(keys, seed, n_extra=64, dups=True):
+    rng = np.random.default_rng(seed)
+    absent = rng.integers(1, 2 ** 63, n_extra, dtype=np.uint64)
+    cands = np.concatenate([keys, absent])
+    if dups:
+        cands = np.concatenate([cands, rng.choice(cands, size=32)])
+    rng.shuffle(cands)
+    return cands
+
+
+def _assert_result(res, exp_keys, exp_vals, msg=""):
+    np.testing.assert_array_equal(res.keys, exp_keys, err_msg=f"{msg} keys")
+    np.testing.assert_array_equal(res.vals, exp_vals, err_msg=f"{msg} vals")
+
+
+# ---------------------------------------------------------------- degeneracy
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_single_member_plan_bit_identical_to_get_batch(kind):
+    _, coll, _, keys, _ = _mk(kind)
+    coll.store.delete_batch(keys[::5])
+    coll.store.flush()
+    cands = _mixed_candidates(keys, seed=2)
+    res = Pipeline(coll, (Member(),)).run(cands)
+    found, vals, reads = coll.store.get_batch(cands)
+    _assert_result(res, cands[found], vals[found], f"[{kind}]")
+    np.testing.assert_array_equal(res.reads, reads,
+                                  err_msg=f"[{kind}] per-candidate reads")
+    assert res.n_candidates == len(cands)
+    assert res.stage_survivors == (("member", int(found.sum())),)
+    if kind == "chained":
+        assert res.reads.max() <= 1
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_stage_reorder_invariance(kind):
+    _, coll, _, keys, _ = _mk(kind, n=256)
+    lo, hi = int(keys.min()), int(np.sort(keys)[200])
+    stages = (Member(), TagEq("tags", 5), RangeFence(lo, hi),
+              TagIn("tags", (1, 5, 9, 13)))
+    cands = _mixed_candidates(keys, seed=3)
+    baseline = None
+    for perm in itertools.permutations(stages):
+        res = Pipeline(coll, perm).run(cands)
+        if baseline is None:
+            baseline = res
+        else:
+            _assert_result(res, baseline.keys, baseline.vals,
+                           f"[{kind} perm={perm}]")
+    assert baseline.keys.size > 0       # the invariance check saw survivors
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_tag_probe_never_returns_dead_key(kind):
+    _, coll, _, keys, vals = _mk(kind)
+    dead = keys[::2]
+    coll.store.delete_batch(dead)
+    coll.store.flush()
+    coll.store.compact()
+    alive = np.setdiff1d(keys, dead)
+    hits = []
+    for tag in range(N_TAGS):
+        res = Pipeline(coll, (TagEq("tags", tag),)).run(keys)
+        # implicit final membership resolution must kill every dead key,
+        # whatever the retrieval planes answer for non-enrolled keys
+        assert not np.isin(res.keys, dead).any(), f"[{kind} tag={tag}]"
+        assert res.stage_survivors[-1][0] == "resolve"
+        hits.append(res.keys)
+    # every live key has exactly one tag: the per-tag plans partition them
+    got = np.sort(np.concatenate(hits))
+    np.testing.assert_array_equal(got, np.sort(alive))
+
+
+# ---------------------------------------------------------- snapshot pinning
+
+def test_plan_straddles_flush_and_compact():
+    _, coll, ref, keys, vals = _mk("chained", memtable_capacity=1 << 30)
+    specs = [("tag_in", "tags", (1, 3, 5, 7, 9)),
+             ("range", int(keys.min()), int(np.sort(keys)[280])),
+             ("member",)]
+    plan = Pipeline.from_specs(coll, specs)
+    ex = plan.open()
+    fence = ex.fences["c"]
+    ref_snap = ref.snapshot()            # oracle frozen at the same instant
+    # mutate underneath the open plan: overwrites flip tags, deletes kill
+    # keys, flush + compact publish new generations and rebuild tag banks
+    rng = np.random.default_rng(17)
+    new_vals = rng.integers(1, 2 ** 60, len(keys), dtype=np.uint64)
+    for s in (coll.store, ref):
+        s.put_batch(keys[::3], new_vals[::3])
+        s.delete_batch(keys[1::3])
+        s.flush()
+        s.compact()
+    assert coll.store.generation.gen_id > fence
+    cands = _mixed_candidates(keys, seed=4)
+    res = ex.run(cands)
+    assert res.fences == {"c": fence}    # the view never moved
+    exp_k, exp_v = ref_snap.plan(specs, cands)
+    _assert_result(res, exp_k, exp_v, "[straddle pinned]")
+    ex.close()
+    # a FRESH plan sees the mutated state
+    res_live = Pipeline.from_specs(coll, specs).run(cands)
+    exp_k, exp_v = ref.plan(specs, cands)
+    _assert_result(res_live, exp_k, exp_v, "[straddle live]")
+    assert coll.store.open_snapshots == 0
+    assert coll.store.pinned_generations == {}
+
+
+def test_scan_driven_plan_matches_oracle():
+    _, coll, ref, keys, _ = _mk("chained")
+    ks = np.sort(keys)
+    specs = [("range", int(ks[20]), int(ks[300])),
+             ("tag_in", "tags", tuple(range(8)))]
+    res = Pipeline.from_specs(coll, specs).run()       # keys=None
+    exp_k, exp_v = ref.plan(specs, None)
+    _assert_result(res, exp_k, exp_v, "[scan-driven]")
+    with pytest.raises(ValueError):
+        Pipeline(coll, (TagEq("tags", 1),)).run(None)
+
+
+# ------------------------------------------------------------------ semijoin
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_semijoin_matches_oracle(kind):
+    cat, coll, ref, keys, vals = _mk(kind)
+    # right relation keyed by the base collection's VALUES (key_fn mapping);
+    # only half the base rows have a join partner
+    orders = cat.create_collection("orders", filter_kind=kind, seed=31,
+                                   memtable_capacity=96)
+    orders.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    r_ref = ReferenceCollection()
+    r_ref.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    rng = np.random.default_rng(23)
+    r_keys = vals[::2]
+    r_vals = rng.integers(1, 2 ** 60, len(r_keys), dtype=np.uint64)
+    orders.store.put_batch(r_keys, r_vals)
+    r_ref.put_batch(r_keys, r_vals)
+    orders.store.flush()
+
+    def key_fn(k, v):
+        return v
+
+    rstages = (TagIn("tags", tuple(range(12))),)
+    rspecs = [("tag_in", "tags", tuple(range(12)))]
+    sj = SemiJoin(Pipeline(coll, (Member(),)),
+                  (JoinStep(orders, key_fn=key_fn, stages=rstages),))
+    cands = _mixed_candidates(keys, seed=5)
+    res = sj.run(cands)
+    exp_k, exp_v, exp_rv = reference_semijoin(
+        ref, [("member",)], cands, [(r_ref, key_fn, rspecs)])
+    _assert_result(res, exp_k, exp_v, f"[semijoin {kind}]")
+    np.testing.assert_array_equal(res.right_vals[0], exp_rv[0],
+                                  err_msg=f"[semijoin {kind}] right vals")
+    stats = res.step_stats[0]
+    assert stats["candidates"] > 0
+    assert stats["matched"] == len(res.keys)
+    assert set(res.fences) == {"c", "orders"}
+    if kind != "none":
+        # the bank prune must drop candidates BEFORE materialization
+        assert stats["materialized"] < stats["candidates"]
+        assert stats["reduction"] > 0
+    assert coll.store.open_snapshots == orders.store.open_snapshots == 0
+
+
+# -------------------------------------------------- enrollment & bank states
+
+def test_enrollment_rides_every_publish_and_prunes_states():
+    _, coll, _, keys, vals = _mk("chained", memtable_capacity=1 << 30)
+    idx = coll.indexes["tags"]
+    gen0 = coll.store.generation.gen_id
+    assert set(idx._states) == {gen0}
+    before = idx.enrollments
+    snap = coll.store.snapshot()         # pins gen0
+    coll.store.put_batch(keys[:50], vals[:50] + np.uint64(1))
+    coll.store.flush()                   # publishes gen0+1
+    assert idx.enrollments == before + 1
+    gen1 = coll.store.generation.gen_id
+    assert set(idx._states) == {gen0, gen1}      # pinned state retained
+    snap.close()
+    coll.store.put_batch(keys[:50], vals[:50] + np.uint64(2))
+    coll.store.flush()                   # next publish prunes gen0
+    gen2 = coll.store.generation.gen_id
+    assert set(idx._states) == {gen2}
+
+
+def test_pinned_plan_probes_captured_bank_state():
+    _, coll, ref, keys, vals = _mk("chained", memtable_capacity=1 << 30)
+    ex = Pipeline(coll, (TagEq("tags", 3),)).open()
+    ref_snap = ref.snapshot()
+    # flip every tag by overwriting values, republish the tag bank
+    for s in (coll.store, ref):
+        s.put_batch(keys, vals + np.uint64(1))
+        s.flush()
+    res = ex.run(keys)
+    exp_k, exp_v = ref_snap.plan([("tag_eq", "tags", 3)], keys)
+    _assert_result(res, exp_k, exp_v, "[captured state]")
+    ex.close()
+    res_new = Pipeline(coll, (TagEq("tags", 3),)).run(keys)
+    exp_k, exp_v = ref.plan([("tag_eq", "tags", 3)], keys)
+    _assert_result(res_new, exp_k, exp_v, "[current state]")
+
+
+def test_catalog_registry_and_errors():
+    cat, coll, _, _, _ = _mk("chained")
+    assert cat.registry.names() == ["c/tags"]
+    assert "c/tags" in cat.registry
+    assert cat.registry.get("c/tags").state is not None
+    stats = cat.registry.stats()
+    assert "c/tags" in stats and "lookups" in stats["c/tags"]
+    with pytest.raises(ValueError):
+        coll.create_index("tags", tag_fn)
+    with pytest.raises(KeyError):
+        cat.registry.get("nope")
+    with pytest.raises(KeyError):
+        cat["nope"]
+    with pytest.raises(ValueError):
+        cat.create_collection("c")
+    with pytest.raises(KeyError):
+        Pipeline(coll, (TagEq("missing", 0),)).run(np.array([1], np.uint64))
+    coll.drop_index("tags")
+    assert cat.registry.names() == []
+    cat.drop_collection("c")
+    assert cat.names() == []
+
+
+# -------------------------------------------------- workloads + accounting
+
+def test_tagged_query_workload_deterministic_and_correct():
+    ops_a = tagged_query(24, batch=48, n_keys=256, seed=5)
+    ops_b = tagged_query(24, batch=48, n_keys=256, seed=5)
+    assert [o.kind for o in ops_a] == [o.kind for o in ops_b]
+    for a, b in zip(ops_a, ops_b):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        assert a.stages == b.stages
+    queries = [o for o in ops_a if o.kind == "query"]
+    assert queries and all(1 <= len(o.stages) <= 3 for o in queries)
+
+    cat = Catalog()
+    coll = cat.create_collection("w", filter_kind="chained",
+                                 memtable_capacity=128, seed=7)
+    coll.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    ref = ReferenceCollection()
+    ref.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    acc = LatencyAccountant()
+    for op in ops_a:
+        if op.kind == "put":
+            coll.store.put_batch(op.keys, op.vals)
+            ref.put_batch(op.keys, op.vals)
+        else:
+            res = Pipeline.from_specs(coll, op.stages).run(op.keys)
+            exp_k, exp_v = ref.plan(op.stages, op.keys)
+            _assert_result(res, exp_k, exp_v, f"[workload {op.stages}]")
+            acc.record(res.reads)
+            acc.record_stages(res.survivor_counts)
+            # survivor flow is monotone: later stages never resurrect keys
+            counts = res.survivor_counts
+            assert all(a >= b for a, b in zip(counts, counts[1:]))
+    rep = acc.report()
+    assert rep["plans"] == len(queries)
+    assert len(rep["stage_survivors"]) >= 1
+    assert rep["stage_survivors"] == [
+        int(sum(c[i] for c in acc.stage_counts if i < len(c)))
+        for i in range(len(rep["stage_survivors"]))]
+
+
+def test_run_workload_dispatches_query_ops():
+    ops = tagged_query(10, batch=32, n_keys=128, seed=11)
+    cat = Catalog()
+    coll = cat.create_collection("w", filter_kind="chained",
+                                 memtable_capacity=64, seed=13)
+    coll.create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    out = run_workload(
+        coll.store, ops,
+        query_fn=lambda op: Pipeline.from_specs(coll, op.stages).run(op.keys))
+    assert out["plans"] == sum(1 for o in ops if o.kind == "query")
+    assert "stage_survivors" in out
+    with pytest.raises(ValueError):
+        run_workload(coll.store, ops)    # query ops but no query_fn

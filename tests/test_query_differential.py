@@ -1,0 +1,253 @@
+"""Differential suite for query plans: engine cascades vs the dict oracle.
+
+Seeded random interleavings of CRUD traffic AND pipeline/semijoin queries
+across TWO catalog collections are fired at the query subsystem and the
+``tests/model.py`` plan oracle in lockstep. Every query — one-shot
+pipelines, scan-driven pipelines, semijoins with key-mapping, and plans
+held OPEN while puts/deletes/flushes/compactions land underneath — must
+agree **bit-exactly** (survivor keys, values, semijoin right-values) for
+all three filter kinds. This is the harness that proves:
+
+- stage verdicts + the implicit membership resolution reproduce the
+  oracle's conjunctive semantics exactly (tag-retrieval noise on
+  non-enrolled keys never leaks);
+- tag-bank enrollment at the publish hook keeps every generation's bank
+  consistent with that generation's live rows;
+- snapshot-pinned plan executions are torn-read-free: an open plan keeps
+  answering from its open-time state (checked against an oracle snapshot
+  frozen at the same instant) while both collections mutate, flush and
+  compact — and its gen-id fences never move;
+- chained plans pay ≤ 1 SSTable read per key per membership resolution.
+
+Fast lane: bounded example budget per kind. ``slow`` lane: the full 500
+randomized interleavings per kind (nightly).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.query import Catalog, JoinStep, Pipeline, SemiJoin
+
+from model import ReferenceCollection, reference_semijoin
+
+KIND_IDX = {"chained": 0, "bloom": 1, "none": 2}
+
+_UNIVERSE = H.random_keys(640, seed=92)
+POOL = _UNIVERSE[:448]          # keys CRUD ops draw from (both collections)
+ABSENT = _UNIVERSE[448:]        # never written (miss/noise traffic)
+
+TAG_BITS = 3
+N_TAGS = 1 << TAG_BITS
+
+
+def tag_fn(keys, vals):
+    return vals & np.uint64(N_TAGS - 1)
+
+
+def _mixed_keys(rng, n, absent_frac=0.3):
+    n_abs = int(round(n * absent_frac))
+    parts = [rng.choice(POOL, size=n - n_abs)]
+    if n_abs:
+        parts.append(rng.choice(ABSENT, size=n_abs))
+    ks = np.concatenate(parts)
+    rng.shuffle(ks)
+    return ks
+
+
+def _rand_specs(rng, scan_driven=False):
+    """1..3 random stage specs; scan-driven plans lead with a range."""
+    specs = []
+    if scan_driven:
+        a, b = np.sort(rng.choice(POOL, size=2, replace=False))
+        specs.append(("range", int(a), int(b) + 1))
+    for _ in range(int(rng.integers(1, 4)) - len(specs)):
+        r = rng.random()
+        if r < 0.35:
+            specs.append(("tag_eq", "tags", int(rng.integers(0, N_TAGS))))
+        elif r < 0.55:
+            k = int(rng.integers(1, N_TAGS // 2 + 1))
+            tags = np.sort(rng.choice(N_TAGS, size=k, replace=False))
+            specs.append(("tag_in", "tags", tuple(int(t) for t in tags)))
+        elif r < 0.8:
+            a, b = np.sort(rng.choice(POOL, size=2, replace=False))
+            specs.append(("range", int(a), int(b) + int(rng.random() < 0.5)))
+        else:
+            specs.append(("member",))
+    return specs or [("member",)]
+
+
+def _check_plan(res, exp_k, exp_v, kind, specs, msg):
+    np.testing.assert_array_equal(res.keys, exp_k, err_msg=f"{msg} keys")
+    np.testing.assert_array_equal(res.vals, exp_v, err_msg=f"{msg} vals")
+    if kind == "chained" and len(res.reads):
+        n_resolves = max(1, sum(1 for s in specs if s[0] == "member"))
+        assert res.reads.max() <= n_resolves, (
+            f"{msg}: chained per-membership-stage read bound violated")
+
+
+MAX_OPEN_PLANS = 3
+
+
+def run_query_differential(filter_kind: str, seed: int,
+                           max_steps: int = 16) -> None:
+    """Replay one seeded interleaving: catalog + 2 collections vs oracle."""
+    rng = np.random.default_rng([seed, KIND_IDX[filter_kind]])
+    cat = Catalog()
+    colls, refs = {}, {}
+    for name in ("a", "b"):
+        colls[name] = cat.create_collection(
+            name, filter_kind=filter_kind,
+            seed=int(rng.integers(0, 1024)),
+            memtable_capacity=int(rng.choice([48, 96, 1 << 30])),
+            compact_min_run=int(rng.choice([2, 3])),
+            auto_compact=bool(rng.random() < 0.7))
+        colls[name].create_index("tags", tag_fn, tag_bits=TAG_BITS)
+        refs[name] = ReferenceCollection()
+        refs[name].create_index("tags", tag_fn, tag_bits=TAG_BITS)
+    open_plans: list[tuple] = []    # (name, specs, PlanExecution, ref snap)
+    n_steps = int(rng.integers(6, max_steps + 1))
+    ops = rng.choice(
+        ["put", "delete", "flush", "compact",
+         "query", "scan_query", "semijoin",
+         "plan_open", "plan_run", "plan_close"],
+        size=n_steps,
+        p=[0.22, 0.12, 0.10, 0.06, 0.16, 0.06, 0.10, 0.08, 0.06, 0.04])
+    for step, op in enumerate(ops):
+        name = ("a", "b")[int(rng.integers(0, 2))]
+        coll, ref = colls[name], refs[name]
+        msg = (f"[query-diff kind={filter_kind} seed={seed} "
+               f"step={step} op={op} coll={name}]")
+        if op == "put":
+            ks = rng.choice(POOL, size=int(rng.integers(1, 40)))
+            vs = rng.integers(1, 2 ** 63, size=len(ks), dtype=np.uint64)
+            coll.store.put_batch(ks, vs)
+            ref.put_batch(ks, vs)
+        elif op == "delete":
+            ks = _mixed_keys(rng, int(rng.integers(1, 24)), absent_frac=0.15)
+            coll.store.delete_batch(ks)
+            ref.delete_batch(ks)
+        elif op == "flush":
+            coll.store.flush()
+            ref.flush()
+        elif op == "compact":
+            coll.store.compact()
+            ref.compact()
+        elif op in ("query", "scan_query"):
+            scan = op == "scan_query"
+            specs = _rand_specs(rng, scan_driven=scan)
+            cands = None if scan else _mixed_keys(
+                rng, int(rng.integers(1, 48)))
+            res = Pipeline.from_specs(coll, specs).run(cands)
+            exp_k, exp_v = ref.plan(specs, cands)
+            _check_plan(res, exp_k, exp_v, filter_kind, specs, msg)
+        elif op == "semijoin":
+            other = "b" if name == "a" else "a"
+            base_specs = _rand_specs(rng)
+            right_specs = _rand_specs(rng)
+            # identity join (both collections share the POOL key space) or
+            # value-mapped join keys, chosen per interleaving step
+            key_fn = None if rng.random() < 0.7 else (lambda k, v: v)
+            cands = _mixed_keys(rng, int(rng.integers(1, 48)))
+            sj = SemiJoin(
+                Pipeline.from_specs(coll, base_specs),
+                (JoinStep(colls[other],
+                          key_fn=key_fn,
+                          stages=Pipeline.from_specs(
+                              colls[other], right_specs).stages),))
+            res = sj.run(cands)
+            exp_k, exp_v, exp_rv = reference_semijoin(
+                ref, base_specs, cands, [(refs[other], key_fn, right_specs)])
+            np.testing.assert_array_equal(res.keys, exp_k,
+                                          err_msg=f"{msg} keys")
+            np.testing.assert_array_equal(res.vals, exp_v,
+                                          err_msg=f"{msg} vals")
+            np.testing.assert_array_equal(res.right_vals[0], exp_rv[0],
+                                          err_msg=f"{msg} right vals")
+        elif op == "plan_open":
+            if len(open_plans) < MAX_OPEN_PLANS:
+                specs = _rand_specs(rng)
+                ex = Pipeline.from_specs(coll, specs).open()
+                open_plans.append((name, specs, ex, ref.snapshot()))
+        elif op == "plan_run" and open_plans:
+            pname, specs, ex, ref_snap = open_plans[
+                int(rng.integers(0, len(open_plans)))]
+            pmsg = f"{msg} pinned-on={pname}"
+            cands = _mixed_keys(rng, int(rng.integers(1, 48)))
+            res = ex.run(cands)
+            assert res.fences == {pname: ex.view.gen_id}, f"{pmsg} fence"
+            exp_k, exp_v = ref_snap.plan(specs, cands)
+            _check_plan(res, exp_k, exp_v, filter_kind, specs, pmsg)
+        elif op == "plan_close" and open_plans:
+            pname, specs, ex, ref_snap = open_plans.pop(
+                int(rng.integers(0, len(open_plans))))
+            # exit check: the pinned plan still answers from open-time state
+            cands = _mixed_keys(rng, 24)
+            res = ex.run(cands)
+            exp_k, exp_v = ref_snap.plan(specs, cands)
+            _check_plan(res, exp_k, exp_v, filter_kind, specs,
+                        f"{msg} pinned-on={pname}")
+            ex.close()
+            ref_snap.close()
+    # final sweep: every still-open plan must have survived the whole
+    # interleaving pinned, then release cleanly; no leaked pins anywhere
+    msg = f"[query-diff kind={filter_kind} seed={seed} final]"
+    cands = np.concatenate([POOL, ABSENT])
+    for pname, specs, ex, ref_snap in open_plans:
+        res = ex.run(cands)
+        exp_k, exp_v = ref_snap.plan(specs, cands)
+        _check_plan(res, exp_k, exp_v, filter_kind, specs,
+                    f"{msg} pinned-on={pname}")
+        ex.close()
+        ref_snap.close()
+    for name in ("a", "b"):
+        specs = [("tag_in", "tags", tuple(range(N_TAGS // 2))), ("member",)]
+        res = Pipeline.from_specs(colls[name], specs).run(cands)
+        exp_k, exp_v = refs[name].plan(specs, cands)
+        _check_plan(res, exp_k, exp_v, filter_kind, specs,
+                    f"{msg} coll={name}")
+        assert colls[name].store.open_snapshots == 0, f"{msg} leaked snaps"
+        assert colls[name].store.pinned_generations == {}, f"{msg} pins"
+
+
+# ------------------------------------------------------------ fast CI lane
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=6, deadline=None)
+def test_query_differential_chained_fast(seed):
+    run_query_differential("chained", seed)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=5, deadline=None)
+def test_query_differential_bloom_fast(seed):
+    run_query_differential("bloom", seed)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=5, deadline=None)
+def test_query_differential_none_fast(seed):
+    run_query_differential("none", seed)
+
+
+# ------------------------------------------------------- nightly slow lane
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=500, deadline=None)
+def test_query_differential_chained_500(seed):
+    run_query_differential("chained", seed, max_steps=12)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=500, deadline=None)
+def test_query_differential_bloom_500(seed):
+    run_query_differential("bloom", seed, max_steps=12)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=500, deadline=None)
+def test_query_differential_none_500(seed):
+    run_query_differential("none", seed, max_steps=12)
