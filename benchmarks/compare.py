@@ -68,6 +68,20 @@ GATES = [
      "survivor_reduction_frac", "higher"),
     ("query_pipeline (filter-pushdown query plans)",
      "semijoin_candidate_reduction", "higher"),
+    # always-on store (ISSUE 9): closed-loop mixed CRUD at 75% of measured
+    # native rate with background compaction mid-stream. Both gates are
+    # same-machine fractions. goodput: the store must keep absorbing the
+    # offered rate while merges run underneath; a compactor that blocks
+    # readers/writers (or admission control that over-stalls) drags it
+    # down. stall_frac: admission-stall wall time over run wall time,
+    # floored at the 0.02 noise floor inside the bench (the
+    # snapshot_compact precedent) so the baseline is deterministic —
+    # writers wedging at the table cap push it toward 1.0, far past the
+    # band. Absolute p50/p95/p99 batch latency rides along ungated.
+    ("sustained (always-on closed-loop CRUD)",
+     "sustained_goodput_frac", "higher"),
+    ("sustained (always-on closed-loop CRUD)",
+     "sustained_stall_frac", "lower"),
 ]
 
 

@@ -39,6 +39,7 @@ REGISTRY = [
     ("snapshot_compact (generations + snapshot-pinned scans)",
      "snapshot_compact"),
     ("query_pipeline (filter-pushdown query plans)", "query_pipeline"),
+    ("sustained (always-on closed-loop CRUD)", "sustained"),
     ("learned_filter (§5.5, Fig 13)", "learned_filter"),
     ("roofline (dry-run artifacts)", "roofline"),
     ("filter_service (fused cascade vs per-layer)", "filter_service"),

@@ -30,6 +30,7 @@ are small by construction (§4) — and each device probes its own key rows.
 from __future__ import annotations
 
 import functools
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -208,6 +209,10 @@ class FilterService:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
         self.mesh = mesh
         self._row_multiple = common.BLOCK_ROWS * self.mesh.devices.size
+        # guards the (state, stats) PAIR: publishes swap both, and a probe
+        # must attribute its counts to the version it actually probed even
+        # when a background rebuild lands mid-call (always-on store)
+        self._swap_lock = threading.Lock()
         self._state: BankState | None = None
         self.publish(self.prepare(filters))
 
@@ -257,14 +262,16 @@ class FilterService:
                          version=self.version + 1)
 
     def publish(self, state: BankState) -> None:
-        """Atomically install a staged state as the serving bank — ONE
-        reference assignment; in-flight readers that captured the previous
-        state finish against it. Stats reset (the caller owns
-        cross-version accounting)."""
-        self._state = state
-        self.stats = ServiceStats(
+        """Atomically install a staged state as the serving bank — the
+        (state, stats) pair swaps under one small lock; in-flight readers
+        that captured the previous state finish against it. Stats reset
+        (the caller owns cross-version accounting)."""
+        stats = ServiceStats(
             hits=np.zeros(state.bank.n_filters, np.int64),
             probes=np.zeros(state.bank.n_filters, np.int64))
+        with self._swap_lock:
+            self._state = state
+            self.stats = stats
 
     # -- batched probing -----------------------------------------------------
     def _block_keys(self, keys: np.ndarray):
@@ -284,10 +291,13 @@ class FilterService:
         to probe an OLDER published bank version bit-identically (stats are
         left untouched for non-current states — cross-version accounting
         belongs to the caller)."""
-        current = state is None or state is self._state
+        with self._swap_lock:              # capture the PAIR coherently: a
+            cur_state = self._state        # publish racing this call cannot
+            cur_stats = self.stats         # tear probe from its accounting
+        current = state is None or state is cur_state
         if state is None:
-            state = self._state            # captured ONCE: a publish racing
-        if len(keys) == 0:                 # this call cannot tear the probe
+            state = cur_state
+        if len(keys) == 0:
             shape = (state.n_filters, 0)
             return np.zeros(shape, bool), np.zeros(shape, np.int32)
         hi2d, lo2d, n = self._block_keys(keys)
@@ -296,9 +306,13 @@ class FilterService:
         probes = np.asarray(probes).reshape(state.n_filters, -1)[:, :n]
         member = member.astype(bool)
         if current:
-            self.stats.lookups += n
-            self.stats.hits += member.sum(axis=1)
-            self.stats.probes += probes.sum(axis=1)
+            # accumulate into the stats snapshot paired with the probed
+            # state: counts land on the version they measured even if a
+            # newer bank published while the kernel ran
+            with self._swap_lock:
+                cur_stats.lookups += n
+                cur_stats.hits += member.sum(axis=1)
+                cur_stats.probes += probes.sum(axis=1)
         return member, probes
 
     def probe_filter(self, index: int, keys: np.ndarray) -> np.ndarray:
@@ -330,9 +344,10 @@ class FilterService:
         if bank.layouts != old.bank.layouts:
             raise ValueError("filter layouts changed; build a new FilterService")
         bank.tables.setflags(write=False)
-        self._state = BankState(bank=bank, tables=jnp.asarray(bank.tables),
-                                probe_fn=old.probe_fn,
-                                version=old.version + 1)
+        state = BankState(bank=bank, tables=jnp.asarray(bank.tables),
+                          probe_fn=old.probe_fn, version=old.version + 1)
+        with self._swap_lock:
+            self._state = state
 
     def rebuild(self, filters: list, *, warm: bool = False) -> None:
         """Structural refresh (filters added/removed/resized), double-

@@ -15,15 +15,17 @@ long-lived cursors — compaction defers GC of tombstones an open snapshot
 still observes. ``workloads`` provides deterministic traffic generators
 and the §5.4 latency accounting.
 """
+from .compactor import BackgroundCompactor
 from .generation import Generation, Snapshot
-from .lsm_store import LsmStore, StoreStats
+from .lsm_store import LsmStore, StoreStats, WriteStall, PublishHookError
 from .workloads import (WorkloadOp, LatencyAccountant, uniform_write_heavy,
                         zipfian_read_heavy, mixed_read_write, crud_mixed,
                         tagged_query, run_workload)
 
 __all__ = [
-    "Generation", "Snapshot",
-    "LsmStore", "StoreStats", "WorkloadOp", "LatencyAccountant",
+    "Generation", "Snapshot", "BackgroundCompactor",
+    "LsmStore", "StoreStats", "WriteStall", "PublishHookError",
+    "WorkloadOp", "LatencyAccountant",
     "uniform_write_heavy", "zipfian_read_heavy", "mixed_read_write",
     "crud_mixed", "tagged_query", "run_workload",
 ]

@@ -188,11 +188,12 @@ class Snapshot:
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
-        """Release the generation pin (idempotent). After the owning
-        store's last open snapshot closes, deferred tombstone GC runs."""
-        if not self.closed:
-            self.closed = True
-            self._store._release(self)
+        """Release the generation pin (idempotent, thread-safe: the owning
+        store performs the closed check-and-set under its small lock, so
+        two racing closers release exactly once). After the store's last
+        open snapshot closes, deferred tombstone GC runs — inline, or on
+        the background compactor when one is active."""
+        self._store._release(self)
 
     def __enter__(self) -> "Snapshot":
         return self

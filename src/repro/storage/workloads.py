@@ -231,13 +231,17 @@ def tagged_query(n_ops: int, batch: int = 256, n_keys: int = 8192,
 
 @dataclass
 class LatencyAccountant:
-    """Accumulates per-get SSTable read counts; reports the calibrated
-    Fig-12 latency percentiles."""
+    """Accumulates per-get SSTable read counts (plus plan stage counts and
+    admission-stall events); reports the calibrated Fig-12 latency
+    percentiles with the counts of each traffic class reported DISTINCTLY
+    — ``n`` is per-key read samples, ``n_plans`` is executed plans — so a
+    plans-only run is never mistaken for an empty one."""
 
     probes_cost_us: float = 2.0
     read_cost_us: float = 9.0
     reads: list = field(default_factory=list)
     stage_counts: list = field(default_factory=list)   # one tuple per plan
+    stalls: list = field(default_factory=list)         # seconds per stall
 
     def record(self, reads: np.ndarray) -> None:
         self.reads.append(np.asarray(reads, dtype=np.int64))
@@ -247,10 +251,18 @@ class LatencyAccountant:
         (the fused-probe cost model: stage i+1 pays survivors[i] keys)."""
         self.stage_counts.append(tuple(int(s) for s in survivors))
 
+    def record_stall(self, seconds: float) -> None:
+        """One write-admission stall (the always-on store's backpressure
+        signal): how long the writer waited for compaction headroom."""
+        self.stalls.append(float(seconds))
+
     def report(self) -> dict:
-        if not self.reads and not self.stage_counts:
-            return {"n": 0}
-        out: dict = {"n": 0}
+        """``n`` counts per-key read samples; ``n_plans`` (with ``plans``
+        kept as its alias for older consumers) counts executed plans —
+        distinct, so a plans-only run reports ``n == 0`` but ``n_plans >
+        0`` instead of looking empty. Stall accounting (count / total /
+        max seconds) rides along whenever any stall was recorded."""
+        out: dict = {"n": 0, "n_plans": len(self.stage_counts)}
         if self.reads:
             reads = np.concatenate(self.reads)
             lat = latency_model(reads, probes_cost_us=self.probes_cost_us,
@@ -269,6 +281,10 @@ class LatencyAccountant:
             out["stage_survivors"] = [
                 int(sum(c[i] for c in self.stage_counts if i < len(c)))
                 for i in range(depth)]
+        if self.stalls:
+            out["write_stalls"] = len(self.stalls)
+            out["stall_time_s"] = float(sum(self.stalls))
+            out["stall_max_s"] = float(max(self.stalls))
         return out
 
 
@@ -307,6 +323,8 @@ def run_workload(store, ops: list[WorkloadOp],
             n_found += int(found.sum())
             n_get += len(op.keys)
     out = accountant.report()
-    out["hit_rate"] = n_found / max(1, n_get)
+    # None, not 0.0, when the workload issued no gets at all: a write-only
+    # run has no hit rate, and 0.0 would read as "every get missed"
+    out["hit_rate"] = (n_found / n_get) if n_get else None
     out["scanned_keys"] = n_scanned
     return out

@@ -109,10 +109,18 @@ MAX_OPEN_SNAPSHOTS = 4          # bounds pinned generations per interleaving
 
 
 def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
-                     get_cap: int = 48) -> None:
-    """Replay one seeded random interleaving against store + oracle."""
+                     get_cap: int = 48, background: bool = False) -> None:
+    """Replay one seeded random interleaving against store + oracle.
+
+    ``background=True`` is the always-on lane: a real
+    ``BackgroundCompactor`` thread merges and GC-sweeps WHILE the
+    interleaving's gets/scans/snapshot reads run, under a tight seeded
+    ``table_cap`` so admission stalls and forced merges actually fire —
+    every read (live or pinned) must stay bit-identical to the dict
+    oracle with compactions in flight, and the quiesced end state must
+    drain below the cap with zero compactor errors."""
     rng = np.random.default_rng([seed, KIND_IDX[filter_kind]])
-    store = LsmStore(
+    kwargs = dict(
         filter_kind=filter_kind,
         bits_per_key=float(rng.choice([6.0, 10.0])),
         fp_alpha=int(rng.choice([6, 8])),
@@ -121,6 +129,14 @@ def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
         compact_min_run=int(rng.choice([2, 3])),
         compact_size_ratio=float(rng.choice([2.0, 4.0, 64.0])),
         auto_compact=bool(rng.random() < 0.7))
+    if background:
+        # tight cap + generous stall bound: admission control stalls
+        # instead of raising, and the compactor always unwedges it
+        kwargs.update(table_cap=int(rng.choice([3, 5])),
+                      stall_timeout_s=30.0)
+    store = LsmStore(**kwargs)
+    if background:
+        store.start_background(poll_s=0.005)
     model = ReferenceStore()
     ever_deleted: set[int] = set()
     chained = filter_kind == "chained"
@@ -131,67 +147,86 @@ def run_differential(filter_kind: str, seed: int, max_steps: int = 18,
          "snap_open", "snap_get", "snap_scan", "snap_close"],
         size=n_steps,
         p=[0.24, 0.14, 0.17, 0.09, 0.10, 0.05, 0.08, 0.05, 0.05, 0.03])
-    for step, op in enumerate(ops):
-        msg = f"[differential kind={filter_kind} seed={seed} step={step} op={op}]"
-        if op == "put":
-            ks = rng.choice(POOL, size=int(rng.integers(1, 40)))
-            vs = rng.integers(1, 2 ** 63, size=len(ks), dtype=np.uint64)
-            store.put_batch(ks, vs)
-            model.put_batch(ks, vs)
-        elif op == "delete":
-            ks = _mixed_keys(rng, int(rng.integers(1, 24)), absent_frac=0.15)
-            store.delete_batch(ks)
-            model.delete_batch(ks)
-            ever_deleted.update(ks.tolist())
-        elif op == "get":
-            _check_get(store, model,
-                       _mixed_keys(rng, int(rng.integers(1, get_cap))), msg)
-        elif op == "scan":
-            lo, hi = _scan_bounds(rng)
-            _check_scan(store, model, lo, hi, msg)
-        elif op == "flush":
-            store.flush()
-            model.flush()
-        elif op == "compact":
-            store.compact()
-            model.compact()
-        elif op == "snap_open":
-            if len(snaps) < MAX_OPEN_SNAPSHOTS:
-                snaps.append((store.snapshot(), model.snapshot()))
-        elif op == "snap_get" and snaps:
-            s_snap, m_snap = snaps[int(rng.integers(0, len(snaps)))]
-            _check_get(s_snap, m_snap,
-                       _mixed_keys(rng, int(rng.integers(1, get_cap))),
-                       msg, chained=chained)
-        elif op == "snap_scan" and snaps:
-            s_snap, m_snap = snaps[int(rng.integers(0, len(snaps)))]
-            lo, hi = _scan_bounds(rng)
-            _check_scan(s_snap, m_snap, lo, hi, msg)
-        elif op == "snap_close" and snaps:
-            s_snap, m_snap = snaps.pop(int(rng.integers(0, len(snaps))))
-            # exit check: the snapshot still answers from its open-time
-            # state no matter what landed since
-            _check_get(s_snap, m_snap, _mixed_keys(rng, 24), msg,
-                       chained=chained)
+    try:
+        for step, op in enumerate(ops):
+            msg = (f"[differential kind={filter_kind} seed={seed} "
+                   f"step={step} op={op} bg={background}]")
+            if op == "put":
+                ks = rng.choice(POOL, size=int(rng.integers(1, 40)))
+                vs = rng.integers(1, 2 ** 63, size=len(ks), dtype=np.uint64)
+                store.put_batch(ks, vs)
+                model.put_batch(ks, vs)
+            elif op == "delete":
+                ks = _mixed_keys(rng, int(rng.integers(1, 24)),
+                                 absent_frac=0.15)
+                store.delete_batch(ks)
+                model.delete_batch(ks)
+                ever_deleted.update(ks.tolist())
+            elif op == "get":
+                _check_get(store, model,
+                           _mixed_keys(rng, int(rng.integers(1, get_cap))),
+                           msg)
+            elif op == "scan":
+                lo, hi = _scan_bounds(rng)
+                _check_scan(store, model, lo, hi, msg)
+            elif op == "flush":
+                store.flush()
+                model.flush()
+            elif op == "compact":
+                store.compact()
+                model.compact()
+            elif op == "snap_open":
+                if len(snaps) < MAX_OPEN_SNAPSHOTS:
+                    snaps.append((store.snapshot(), model.snapshot()))
+            elif op == "snap_get" and snaps:
+                s_snap, m_snap = snaps[int(rng.integers(0, len(snaps)))]
+                _check_get(s_snap, m_snap,
+                           _mixed_keys(rng, int(rng.integers(1, get_cap))),
+                           msg, chained=chained)
+            elif op == "snap_scan" and snaps:
+                s_snap, m_snap = snaps[int(rng.integers(0, len(snaps)))]
+                lo, hi = _scan_bounds(rng)
+                _check_scan(s_snap, m_snap, lo, hi, msg)
+            elif op == "snap_close" and snaps:
+                s_snap, m_snap = snaps.pop(int(rng.integers(0, len(snaps))))
+                # exit check: the snapshot still answers from its open-time
+                # state no matter what landed since
+                _check_get(s_snap, m_snap, _mixed_keys(rng, 24), msg,
+                           chained=chained)
+                _check_scan(s_snap, m_snap, *FULL_RANGE, msg)
+                s_snap.close()
+                m_snap.close()
+        # final sweep on fully-flushed state: total point/range agreement
+        # plus the chained exclusion-set invariant; every still-open
+        # snapshot must have survived the whole interleaving and release
+        # its pin cleanly
+        msg = f"[differential kind={filter_kind} seed={seed} final]"
+        store.flush()
+        for s_snap, m_snap in snaps:
+            _check_get(s_snap, m_snap, _UNIVERSE, msg, chained=chained)
             _check_scan(s_snap, m_snap, *FULL_RANGE, msg)
             s_snap.close()
             m_snap.close()
-    # final sweep on fully-flushed state: total point/range agreement plus
-    # the chained exclusion-set invariant; every still-open snapshot must
-    # have survived the whole interleaving and release its pin cleanly
-    msg = f"[differential kind={filter_kind} seed={seed} final]"
-    store.flush()
-    for s_snap, m_snap in snaps:
-        _check_get(s_snap, m_snap, _UNIVERSE, msg, chained=chained)
-        _check_scan(s_snap, m_snap, *FULL_RANGE, msg)
-        s_snap.close()
-        m_snap.close()
-    assert store.open_snapshots == 0, f"{msg}: leaked open snapshots"
-    assert store.pinned_generations == {}, f"{msg}: leaked generation pins"
-    _check_get(store, model, _UNIVERSE, msg)
-    _check_scan(store, model, *FULL_RANGE, msg)
-    if filter_kind == "chained":
-        _assert_exclusion_sets(store, model, ever_deleted, msg)
+        assert store.open_snapshots == 0, f"{msg}: leaked open snapshots"
+        assert store.pinned_generations == {}, f"{msg}: leaked generation pins"
+        if background:
+            # quiesce: compaction debt + deferred GC drain below the cap,
+            # and no step on the compactor thread may have failed
+            assert store.wait_compaction_idle(timeout_s=30.0), \
+                f"{msg}: background compactor never went idle"
+            store.stop_background()
+            assert store.background_errors == [], \
+                f"{msg}: background errors {store.background_errors!r}"
+            assert store.n_tables < store.table_cap, \
+                f"{msg}: quiesced at {store.n_tables} tables, cap " \
+                f"{store.table_cap}"
+        _check_get(store, model, _UNIVERSE, msg)
+        _check_scan(store, model, *FULL_RANGE, msg)
+        if filter_kind == "chained":
+            _assert_exclusion_sets(store, model, ever_deleted, msg)
+    finally:
+        if background:
+            store.stop_background()
 
 
 # ------------------------------------------------------------ fast CI lane
@@ -213,6 +248,30 @@ def test_differential_bloom_fast(seed):
 @settings(max_examples=8, deadline=None)
 def test_differential_none_fast(seed):
     run_differential("none", seed)
+
+
+# --------------------------------------------- always-on (background) lane
+# the same interleavings with a REAL compactor thread merging underneath:
+# every live get/scan and every pinned-snapshot read must stay bit-identical
+# to the dict oracle while compactions are in flight, and the quiesced end
+# state must drain below the table cap with zero compactor errors
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=6, deadline=None)
+def test_differential_background_chained_fast(seed):
+    run_differential("chained", seed, background=True)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=4, deadline=None)
+def test_differential_background_bloom_fast(seed):
+    run_differential("bloom", seed, background=True)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=4, deadline=None)
+def test_differential_background_none_fast(seed):
+    run_differential("none", seed, background=True)
 
 
 # ------------------------------------------------------- nightly slow lane
@@ -241,3 +300,27 @@ def test_differential_bloom_500(seed):
 @settings(max_examples=500, deadline=None)
 def test_differential_none_500(seed):
     run_differential("none", seed, max_steps=12, get_cap=32)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=150, deadline=None)
+def test_differential_background_chained_150(seed):
+    run_differential("chained", seed, max_steps=12, get_cap=32,
+                     background=True)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=150, deadline=None)
+def test_differential_background_bloom_150(seed):
+    run_differential("bloom", seed, max_steps=12, get_cap=32,
+                     background=True)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=150, deadline=None)
+def test_differential_background_none_150(seed):
+    run_differential("none", seed, max_steps=12, get_cap=32,
+                     background=True)

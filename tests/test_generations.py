@@ -485,8 +485,13 @@ def test_flush_past_table_cap_preserves_batch():
     dels = KEYS[:10]                       # tombstones ride the lost batch
     store.put_batch(last, last)
     store.delete_batch(dels)
-    with pytest.raises(RuntimeError, match="compact"):
+    with pytest.raises(RuntimeError, match="compact") as exc_info:
         store.flush()
+    # the overflow error is typed backpressure now: still a RuntimeError
+    # for pre-typed callers, but carrying the install-time table count
+    from repro.storage import WriteStall
+    assert isinstance(exc_info.value, WriteStall)
+    assert exc_info.value.n_tables == MAX_TABLES + 1
     assert store.n_tables == MAX_TABLES + 1       # batch NOT lost
     # reads still serve the last published (consistent) generation
     f, _, _ = store.get_batch(last)
